@@ -1,0 +1,121 @@
+"""Shared benchmark infrastructure.
+
+Data sets mirror the paper's §6.2 at container scale (documented scaling:
+N=12,000 instead of 100,000–4M; the schedulers are O(|E| log |V|) and the
+executors O(nnz), so relative results carry). Matrices are cached per
+process. Wall-clock timing follows §6.1: two warm-up runs, then the median
+of repeated timed runs.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (
+    DEFAULT_L,
+    apply_reordering,
+    bsp_cost,
+    check_validity,
+    compile_plan,
+    funnel_grow_local,
+    grow_local,
+    hdagg_schedule,
+    serial_schedule,
+    spmp_like_schedule,
+    wavefront_schedule,
+)
+from repro.solver import make_solver
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    ichol0,
+    narrow_band_lower,
+    poisson2d_matrix,
+    poisson3d_matrix,
+)
+from repro.sparse.csr import lower_triangle_of
+
+N_SCALE = 12_000  # paper uses 100k for random sets; scaled for the container
+K_CORES = 8
+
+SCHEDULERS: Dict[str, Callable] = {
+    "GrowLocal": lambda d, k: grow_local(d, k),
+    "Funnel+GL": lambda d, k: funnel_grow_local(d, k),
+    "SpMP-like": lambda d, k: spmp_like_schedule(d, k),
+    "HDagg": lambda d, k: hdagg_schedule(d, k),
+    "Wavefront": lambda d, k: wavefront_schedule(d, k),
+}
+
+
+@lru_cache(maxsize=None)
+def dataset(name: str):
+    """-> list of (matrix_name, lower CSR). Mirrors §6.2 families."""
+    if name == "suitesparse":  # FEM stand-ins (§6.2.1 substitute)
+        mats = {
+            "poisson2d_110": lower_triangle_of(poisson2d_matrix(110)),
+            "poisson3d_23": lower_triangle_of(poisson3d_matrix(23)),
+            "band2d_mixed": lower_triangle_of(poisson2d_matrix(155, 78)),
+        }
+    elif name == "ichol":  # §6.2.3
+        mats = {
+            "poisson2d_90_iCh": ichol0(poisson2d_matrix(90)),
+            "poisson3d_20_iCh": ichol0(poisson3d_matrix(20)),
+        }
+    elif name == "erdos_renyi":  # §6.2.4: p in {1e-4, 5e-4, 2e-3} at N=100k
+        # keep expected row-degree: p' = p * (100_000 / N_SCALE)
+        scale = 100_000 / N_SCALE
+        mats = {
+            f"ER_{N_SCALE//1000}k_p{p:g}": erdos_renyi_lower(
+                N_SCALE, p * scale, seed=i
+            )
+            for i, p in enumerate((1e-4, 5e-4, 2e-3))
+        }
+    elif name == "narrow_band":  # §6.2.5: (p, B) pairs
+        mats = {
+            f"NB_p{p:g}_b{b:g}": narrow_band_lower(N_SCALE, p, b, seed=i)
+            for i, (p, b) in enumerate(((0.14, 10), (0.05, 20), (0.03, 42)))
+        }
+    else:
+        raise ValueError(name)
+    return list(mats.items())
+
+
+ALL_DATASETS = ("suitesparse", "ichol", "erdos_renyi", "narrow_band")
+
+
+def time_callable(fn: Callable[[], object], *, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def solver_for(L, sched, width=None):
+    L2, s2, _, _ = apply_reordering(L, sched)
+    plan = compile_plan(L2, s2, width=width)
+    solve = make_solver(plan)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(L.n_rows).astype(np.float32)
+    import jax.numpy as jnp
+
+    bj = jnp.asarray(b)
+    solve(bj).block_until_ready()  # compile
+    return solve, bj, plan
+
+
+def geomean(xs: List[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
+
+
+def print_csv(name: str, rows: List[Tuple]):
+    """Uniform output: name,us_per_call,derived."""
+    for row in rows:
+        print(",".join(str(r) for r in row), flush=True)

@@ -1,0 +1,35 @@
+"""Kernel-level roofline: the Pallas SpTRSV executor's arithmetic intensity
+and the bytes it streams per solve — the §Roofline entry for the paper's own
+workload (kernel view; the distributed view lives in launch/dryrun.py)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    K_CORES,
+    dag_from_lower_csr,
+    dataset,
+    grow_local,
+    solver_for,
+    time_callable,
+)
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def run(csv_rows):
+    print("# Kernel roofline — Pallas SpTRSV plan traffic (TPU v5e model)")
+    print(f"{'matrix':20s} {'flops':>12s} {'bytes':>12s} {'AI':>6s} "
+          f"{'t_mem_us':>9s} {'t_comp_us':>9s} {'cpu_meas_us':>11s}")
+    for mname, L in dataset("narrow_band") + dataset("erdos_renyi"):
+        dag = dag_from_lower_csr(L)
+        sched = grow_local(dag, K_CORES)
+        solve, b, plan = solver_for(L, sched)
+        stats = plan.stats()
+        flops = 2.0 * (L.nnz - L.n_rows) + L.n_rows
+        bytes_ = stats["bytes_streamed"] + 4 * L.n_rows * 3  # plan + b + x r/w
+        ai = flops / bytes_
+        t_mem = bytes_ / HBM_BW * 1e6
+        t_comp = flops / PEAK_FLOPS * 1e6
+        t_meas = time_callable(lambda: solve(b).block_until_ready()) * 1e6
+        print(f"{mname:20s} {flops:12.3e} {bytes_:12.3e} {ai:6.3f} "
+              f"{t_mem:9.2f} {t_comp:9.3f} {t_meas:11.1f}")
+        csv_rows.append((f"roofline.{mname}.t_mem_us", round(t_mem, 2),
+                         f"AI={ai:.3f};slot_util={stats['nnz_slot_utilization']:.3f}"))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table. Prints human tables to
+stdout and a ``name,us_per_call,derived`` CSV block at the end.
+
+  PYTHONPATH=src python -m benchmarks.run              # all tables
+  PYTHONPATH=src python -m benchmarks.run t71 t72      # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+TABLES = {
+    "t71": ("table71_speedups", "Table 7.1 speed-ups over Serial"),
+    "t72": ("table72_barriers", "Table 7.2 barrier reduction"),
+    "t73": ("table73_funnel", "§7.3 Funnel coarsening ablation"),
+    "t74": ("table74_reorder", "Table 7.3 reordering ablation"),
+    "t75": ("table75_arch", "Table 7.4 executors/architectures"),
+    "t76": ("table76_scaling", "Table 7.5 core scaling"),
+    "t77": ("table77_amortization", "Table 7.6 amortization threshold"),
+    "t78": ("table78_blocks", "Table 7.7 block-parallel scheduling"),
+    "roofline": ("kernel_roofline", "Kernel roofline"),
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    csv_rows = []
+    for key in which:
+        mod_name, desc = TABLES[key]
+        print(f"\n===== {key}: {desc} =====", flush=True)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        mod.run(csv_rows)
+        print(f"[{key} done in {time.time()-t0:.1f}s]", flush=True)
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 7.1 — geometric-mean speed-up over Serial per data set.
+
+Speed-up here has two readings, both reported:
+  * measured — wall-clock of the JAX scan executor with each scheduler's
+    plan vs the serial plan (CPU container; one chip's vector units stand in
+    for the 22-core CPU);
+  * modeled  — BSP cost model ratio (work + L·barriers), the quantity the
+    schedulers optimize (paper §2.2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    ALL_DATASETS,
+    K_CORES,
+    SCHEDULERS,
+    bsp_cost,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+    serial_schedule,
+    solver_for,
+    time_callable,
+)
+
+
+def run(csv_rows):
+    header = f"{'dataset':14s} " + " ".join(f"{n:>11s}" for n in SCHEDULERS)
+    print("# Table 7.1 — geomean speed-up over Serial (measured | modeled)")
+    print(header)
+    for ds in ALL_DATASETS:
+        meas = {n: [] for n in SCHEDULERS}
+        mod = {n: [] for n in SCHEDULERS}
+        for mname, L in dataset(ds):
+            dag = dag_from_lower_csr(L)
+            ser = serial_schedule(dag)
+            ser_cost = bsp_cost(dag, ser)
+            solve_s, b_s, _ = solver_for(L, ser)
+            t_serial = time_callable(lambda: solve_s(b_s).block_until_ready())
+            for sname, fn in SCHEDULERS.items():
+                sched = fn(dag, K_CORES)
+                solve, b, _ = solver_for(L, sched)
+                t = time_callable(lambda: solve(b).block_until_ready())
+                meas[sname].append(t_serial / t)
+                mod[sname].append(ser_cost / bsp_cost(dag, sched))
+        cells = []
+        for sname in SCHEDULERS:
+            gm, gmod = geomean(meas[sname]), geomean(mod[sname])
+            cells.append(f"{gm:5.2f}|{gmod:5.2f}")
+            csv_rows.append(
+                (f"t71.{ds}.{sname}", round(gm, 3), round(gmod, 3))
+            )
+        print(f"{ds:14s} " + " ".join(f"{c:>11s}" for c in cells))

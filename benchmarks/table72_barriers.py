@@ -1,0 +1,34 @@
+"""Paper Table 7.2 — reduction of synchronization barriers relative to the
+number of wavefronts (geomean per data set). The paper's headline:
+GrowLocal 14.99x on SuiteSparse vs HDagg 1.24x (12.07x relative)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    ALL_DATASETS,
+    K_CORES,
+    SCHEDULERS,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+)
+from repro.sparse import longest_path_length
+
+
+def run(csv_rows):
+    names = [n for n in SCHEDULERS if n != "Wavefront"]
+    print("# Table 7.2 — geomean (#wavefronts / #supersteps)")
+    print(f"{'dataset':14s} " + " ".join(f"{n:>11s}" for n in names))
+    for ds in ALL_DATASETS:
+        red = {n: [] for n in names}
+        for mname, L in dataset(ds):
+            dag = dag_from_lower_csr(L)
+            wf = longest_path_length(dag)
+            for sname in names:
+                sched = SCHEDULERS[sname](dag, K_CORES)
+                red[sname].append(wf / max(sched.n_supersteps, 1))
+        cells = []
+        for sname in names:
+            gm = geomean(red[sname])
+            cells.append(f"{gm:8.2f}")
+            csv_rows.append((f"t72.{ds}.{sname}", round(gm, 2), ""))
+        print(f"{ds:14s} " + " ".join(f"{c:>11s}" for c in cells))

@@ -1,0 +1,49 @@
+"""Paper §7.3 — impact of Funnel coarsening: scheduling time, supersteps,
+BSP cost, and coarse-graph size, GrowLocal vs Funnel+GrowLocal."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (
+    ALL_DATASETS,
+    K_CORES,
+    bsp_cost,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+)
+from repro.core import (
+    coarsen_dag,
+    funnel_grow_local,
+    funnel_partition,
+    grow_local,
+    transitive_sparsify,
+)
+
+
+def run(csv_rows):
+    print("# §7.3 — Funnel coarsening ablation")
+    print(f"{'dataset':14s} {'sched_speedup':>13s} {'coarse_ratio':>12s} "
+          f"{'ss_GL':>8s} {'ss_F+GL':>8s} {'cost_ratio':>10s}")
+    for ds in ALL_DATASETS:
+        sp, cr, s1, s2, costr = [], [], [], [], []
+        for mname, L in dataset(ds):
+            dag = dag_from_lower_csr(L)
+            t0 = time.perf_counter()
+            gl = grow_local(dag, K_CORES)
+            t_gl = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            fgl = funnel_grow_local(dag, K_CORES)
+            t_fgl = time.perf_counter() - t0
+            part = funnel_partition(transitive_sparsify(dag), max_size=64)
+            c = coarsen_dag(transitive_sparsify(dag), part)
+            sp.append(t_gl / t_fgl)
+            cr.append(dag.n / c.coarse.n)
+            s1.append(gl.n_supersteps)
+            s2.append(fgl.n_supersteps)
+            costr.append(bsp_cost(dag, gl) / bsp_cost(dag, fgl))
+        row = (geomean(sp), geomean(cr), geomean(s1), geomean(s2), geomean(costr))
+        print(f"{ds:14s} {row[0]:13.2f} {row[1]:12.2f} {row[2]:8.1f} "
+              f"{row[3]:8.1f} {row[4]:10.3f}")
+        csv_rows.append((f"t73.{ds}.sched_speedup", round(row[0], 3),
+                         f"coarse_ratio={row[1]:.2f}"))

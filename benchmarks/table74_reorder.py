@@ -1,0 +1,43 @@
+"""Paper Table 7.3 — impact of the §5 locality reordering: executor
+wall-clock with and without the symmetric permutation (same schedule)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    ALL_DATASETS,
+    K_CORES,
+    compile_plan,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+    grow_local,
+    solver_for,
+    time_callable,
+)
+from repro.solver import make_solver
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(csv_rows):
+    print("# Table 7.3 — reordering ablation (speed-up of reordered vs not)")
+    print(f"{'dataset':14s} {'reorder_gain':>12s}")
+    for ds in ALL_DATASETS:
+        gains = []
+        for mname, L in dataset(ds):
+            dag = dag_from_lower_csr(L)
+            sched = grow_local(dag, K_CORES)
+            # with reordering
+            solve_r, b_r, _ = solver_for(L, sched)
+            t_r = time_callable(lambda: solve_r(b_r).block_until_ready())
+            # without reordering: compile the plan on the ORIGINAL ids
+            plan = compile_plan(L, sched)
+            solve_n = make_solver(plan)
+            b = jnp.asarray(
+                np.random.default_rng(0).standard_normal(L.n_rows), jnp.float32
+            )
+            solve_n(b).block_until_ready()
+            t_n = time_callable(lambda: solve_n(b).block_until_ready())
+            gains.append(t_n / t_r)
+        g = geomean(gains)
+        print(f"{ds:14s} {g:12.3f}")
+        csv_rows.append((f"t74.{ds}.reorder_gain", round(g, 3), ""))

@@ -1,0 +1,36 @@
+"""Paper Table 7.5/Fig 7.2 — scaling with the number of cores k (modeled
+BSP speed-up; the schedule quality trend with k is the scheduler property)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    K_CORES,
+    bsp_cost,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+    grow_local,
+    serial_schedule,
+)
+from repro.sparse import average_wavefront_size
+
+CORES = (4, 8, 16, 32, 64)
+
+
+def run(csv_rows):
+    print("# Table 7.5 — GrowLocal modeled speed-up vs cores (suitesparse-sub)")
+    print(f"{'matrix':162s}"[:20] + " avg_wf " + " ".join(f"k={k:<5d}" for k in CORES))
+    rows = {k: [] for k in CORES}
+    for mname, L in dataset("suitesparse") + dataset("narrow_band"):
+        dag = dag_from_lower_csr(L)
+        ser = bsp_cost(dag, serial_schedule(dag))
+        cells = []
+        for k in CORES:
+            s = grow_local(dag, k)
+            sp = ser / bsp_cost(dag, s)
+            rows[k].append(sp)
+            cells.append(f"{sp:6.2f}")
+        print(f"{mname:20s} {average_wavefront_size(dag):6.0f} " + " ".join(cells))
+    for k in CORES:
+        csv_rows.append((f"t76.k{k}.geomean_speedup", round(geomean(rows[k]), 3), ""))
+    print("geomean             " + "       " + " ".join(
+        f"{geomean(rows[k]):6.2f}" for k in CORES))

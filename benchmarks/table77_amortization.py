@@ -1,0 +1,60 @@
+"""Paper Table 7.6 — amortization threshold:
+scheduling_time / (serial_exec - parallel_exec); how many solves pay for
+the inspector (quartiles per scheduler).
+
+Single-core container note: the parallel execution time is MODELED as
+serial_exec * (BSP parallel cost / BSP serial cost) — on one physical core a
+parallel schedule can never beat serial wall-clock, which would make the
+paper's metric degenerate (+inf); the BSP model is the quantity the paper's
+schedulers optimize."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    ALL_DATASETS,
+    K_CORES,
+    SCHEDULERS,
+    bsp_cost,
+    dag_from_lower_csr,
+    dataset,
+    serial_schedule,
+    solver_for,
+    time_callable,
+)
+
+
+def run(csv_rows):
+    print("# Table 7.6 — amortization threshold (Q25 / median / Q75)")
+    print("# parallel exec time modeled via BSP cost (see module docstring)")
+    print(f"{'scheduler':12s} {'Q25':>9s} {'median':>9s} {'Q75':>9s}")
+    mats = [mt for ds in ALL_DATASETS for mt in dataset(ds)]
+    for sname, fn in SCHEDULERS.items():
+        ratios = []
+        for mname, L in mats:
+            dag = dag_from_lower_csr(L)
+            t0 = time.perf_counter()
+            sched = fn(dag, K_CORES)
+            t_sched = time.perf_counter() - t0
+            ser = serial_schedule(dag)
+            solve_s, b_s, _ = solver_for(L, ser)
+            t_serial = time_callable(lambda: solve_s(b_s).block_until_ready(),
+                                     reps=3)
+            t_par = t_serial * bsp_cost(dag, sched) / bsp_cost(dag, ser)
+            if t_serial > t_par:
+                ratios.append(t_sched / (t_serial - t_par))
+            else:
+                ratios.append(float("inf"))
+        finite = [r for r in ratios if np.isfinite(r)]
+        if not finite:
+            print(f"{sname:12s} {'inf':>9s} {'inf':>9s} {'inf':>9s}")
+            csv_rows.append((f"t77.{sname}.median_amortization", "inf", ""))
+            continue
+        q25, med, q75 = np.percentile(finite, [25, 50, 75])
+        n_inf = len(ratios) - len(finite)
+        print(f"{sname:12s} {q25:9.1f} {med:9.1f} {q75:9.1f}"
+              + (f"   ({n_inf} no-gain matrices excluded)" if n_inf else ""))
+        csv_rows.append((f"t77.{sname}.median_amortization", round(float(med), 2),
+                         f"q25={q25:.1f};q75={q75:.1f};excluded={n_inf}"))

@@ -1,0 +1,74 @@
+"""Train a small LM end-to-end on CPU: the full framework path
+(config -> params -> data pipeline -> train loop -> checkpoint -> resume).
+
+By default trains a ~12M-parameter granite-family model for 60 steps and
+verifies the loss decreases, then kills and resumes from the checkpoint.
+Pass --steps/--d-model to scale up (e.g. ~100M: --d-model 512 --layers 8).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticLMData
+from repro.models import init_params, param_specs
+from repro.train import AdamWConfig, make_train_step
+from repro.train.train_loop import init_train_state
+
+p = argparse.ArgumentParser()
+p.add_argument("--steps", type=int, default=60)
+p.add_argument("--d-model", type=int, default=256)
+p.add_argument("--layers", type=int, default=4)
+p.add_argument("--batch", type=int, default=8)
+p.add_argument("--seq", type=int, default=128)
+p.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+args = p.parse_args()
+
+cfg = dataclasses.replace(
+    get_reduced("granite_3_2b"),
+    d_model=args.d_model,
+    n_layers=args.layers,
+    n_heads=max(4, args.d_model // 64),
+    n_kv_heads=max(2, args.d_model // 128),
+    d_ff=args.d_model * 4,
+    vocab_size=2048,
+    vocab_pad_to=256,
+)
+params = init_params(param_specs(cfg), jax.random.PRNGKey(0), dtype=jnp.float32)
+n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+print(f"model: {cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+      f"params={n_params/1e6:.1f}M")
+
+data = SyntheticLMData(vocab=cfg.vocab_size, batch=args.batch, seq=args.seq, seed=1)
+state = init_train_state(cfg, params)
+opt = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+step_fn = jax.jit(make_train_step(cfg, opt, microbatches=2))
+
+losses = []
+t0 = time.time()
+for step in range(args.steps):
+    batch = data.next_batch(step)
+    state, metrics = step_fn(state, batch)
+    losses.append(float(metrics["loss"]))
+    if step % 10 == 0 or step == args.steps - 1:
+        print(f"step {step:4d} loss {losses[-1]:.4f} "
+              f"lr {float(metrics['lr']):.2e} "
+              f"gnorm {float(metrics['grad_norm']):.2f}")
+print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+assert last < first, f"loss did not decrease: {first:.3f} -> {last:.3f}"
+print(f"loss {first:.3f} -> {last:.3f}  (decreasing ✓)")
+
+# checkpoint / kill / resume
+save_checkpoint(args.ckpt, state, step=args.steps)
+restored, meta = restore_checkpoint(args.ckpt, template=state)
+state2, metrics2 = step_fn(restored, data.next_batch(args.steps))
+print(f"resumed at step {meta['step']}: loss {float(metrics2['loss']):.4f}")
+print("OK")

@@ -1,0 +1,73 @@
+"""Core library: the paper's scheduling contribution.
+
+  * ``grow_local`` — the GrowLocal scheduler (§3, Alg. 3.1)
+  * ``funnel_partition`` / ``coarsen_dag`` / ``pull_back_schedule`` — §4
+  * ``apply_reordering`` — §5 locality reordering
+  * ``block_parallel_schedule`` — §3.1
+  * baselines: ``wavefront_schedule``, ``hdagg_schedule``, ``spmp_like_schedule``
+  * ``Schedule`` / ``check_validity`` / ``bsp_cost`` — Def. 2.1 + cost model
+  * ``compile_plan`` — schedule -> padded ExecPlan for the TPU executors
+"""
+from repro.core.blocks import block_parallel_schedule, block_sub_dag, split_ranges
+from repro.core.coarsen import (
+    Coarsening,
+    coarsen_dag,
+    funnel_partition,
+    is_cascade,
+    pull_back_schedule,
+    transitive_sparsify,
+)
+from repro.core.growlocal import grow_local
+from repro.core.hdagg import hdagg_schedule
+from repro.core.plan import ExecPlan, compile_plan
+from repro.core.reorder import Reordering, apply_reordering, schedule_order
+from repro.core.schedule import (
+    DEFAULT_L,
+    Schedule,
+    bsp_cost,
+    check_validity,
+    schedule_stats,
+    serial_schedule,
+)
+from repro.core.spmp_like import L_P2P_EFFECTIVE, spmp_like_schedule
+from repro.core.wavefront import wavefront_schedule
+
+__all__ = [
+    "grow_local",
+    "funnel_grow_local",
+    "hdagg_schedule",
+    "spmp_like_schedule",
+    "wavefront_schedule",
+    "serial_schedule",
+    "Schedule",
+    "check_validity",
+    "bsp_cost",
+    "schedule_stats",
+    "DEFAULT_L",
+    "L_P2P_EFFECTIVE",
+    "funnel_partition",
+    "coarsen_dag",
+    "pull_back_schedule",
+    "is_cascade",
+    "transitive_sparsify",
+    "Coarsening",
+    "apply_reordering",
+    "schedule_order",
+    "Reordering",
+    "block_parallel_schedule",
+    "block_sub_dag",
+    "split_ranges",
+    "ExecPlan",
+    "compile_plan",
+]
+
+
+def funnel_grow_local(dag, k, *, max_size: int = 64, L: float = DEFAULT_L,
+                      sparsify: bool = True):
+    """Funnel+GL (paper Tables 7.1–7.2): transitive sparsification, in-funnel
+    coarsening, GrowLocal on the coarse DAG, pull-back."""
+    work = transitive_sparsify(dag) if sparsify else dag
+    part = funnel_partition(work, max_size=max_size)
+    c = coarsen_dag(work, part)
+    coarse_sched = grow_local(c.coarse, k, L=L)
+    return pull_back_schedule(c, coarse_sched, dag.n)

@@ -1,0 +1,159 @@
+"""ExecPlan — compile a BSP schedule into padded tensors for TPU executors.
+
+The executor view of a schedule (DESIGN.md §3/§4):
+
+  * supersteps execute one after another (scan steps / kernel grid steps);
+  * within a superstep, each of the k cores processes its chain of rows
+    **sequentially** (same-core dependencies are legal — that is GrowLocal's
+    main source of barrier savings);
+  * the k cores advance in lock-step: sequential position t of every chain
+    executes simultaneously (vector parallelism across cores).
+
+The plan therefore pads every superstep to a rectangle:
+
+    step t = 0..chain_len(s)-1 of superstep s processes rows
+    row_ids[s_off + t, 0..k-1], each row with up to W off-diagonal entries
+    col_idx[..., w] / vals[..., w] (padded with col -> self, val -> 0).
+
+Rows are padded with a sentinel id pointing at a scratch slot (n), so padding
+lanes write to scratch and never corrupt x. The off-diagonal width W is a
+per-plan maximum; rows wider than W are split into multiple *virtual rows*
+(partial-sum rows that accumulate into the same x slot — the last virtual row
+finishes with the diagonal division). The plan compiler reports padding
+efficiency; the §Perf loop iterates on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.schedule import Schedule
+from repro.sparse.csr import CSRMatrix
+
+
+@dataclasses.dataclass
+class ExecPlan:
+    """Padded execution plan. Shapes:
+    row_ids   int32[T, k]      — target row of each (step, core); n = padding
+    col_idx   int32[T, k, W]   — gather indices into x (self-padded)
+    vals      float32/64[T,k,W]— off-diagonal values (0-padded)
+    diag      float[T, k]      — diagonal value of the row (1 for padding)
+    accum     bool[T, k]       — True: this step only accumulates partial
+                                  sums (row split over multiple steps)
+    step_bounds int32[S+1]     — superstep s covers steps
+                                  [step_bounds[s], step_bounds[s+1])
+    """
+
+    n: int
+    k: int
+    W: int
+    row_ids: np.ndarray
+    col_idx: np.ndarray
+    vals: np.ndarray
+    diag: np.ndarray
+    accum: np.ndarray
+    step_bounds: np.ndarray
+
+    @property
+    def n_steps(self) -> int:
+        return self.row_ids.shape[0]
+
+    @property
+    def n_supersteps(self) -> int:
+        return len(self.step_bounds) - 1
+
+    def stats(self) -> dict:
+        real = self.row_ids != self.n
+        nnz_slots = self.col_idx.shape[0] * self.k * self.W
+        real_nnz = int((self.vals != 0).sum())
+        return {
+            "n_steps": self.n_steps,
+            "n_supersteps": self.n_supersteps,
+            "k": self.k,
+            "W": self.W,
+            "row_slot_utilization": float(real.mean()),
+            "nnz_slot_utilization": real_nnz / max(nnz_slots, 1),
+            "bytes_streamed": int(
+                self.col_idx.size * 4 + self.vals.size * self.vals.itemsize
+                + self.row_ids.size * 4 + self.diag.size * self.diag.itemsize
+            ),
+        }
+
+
+def compile_plan(
+    L: CSRMatrix,
+    sched: Schedule,
+    *,
+    width: int | None = None,
+    dtype=np.float32,
+) -> ExecPlan:
+    """Compile (matrix, schedule) into an ExecPlan.
+
+    ``width``: max off-diagonal entries per virtual row (W). Defaults to the
+    95th percentile of row nnz (clipped to [4, 512]) — wide rows are split,
+    narrow rows padded; the §Perf loop tunes this."""
+    n, k = L.n_rows, sched.k
+    row_nnz_off = L.row_nnz() - 1  # off-diagonal count (diag always present)
+    assert (row_nnz_off >= 0).all(), "matrix must have a full diagonal"
+    if width is None:
+        width = int(np.clip(np.percentile(row_nnz_off, 95) if n else 4, 4, 512))
+        width = max(width, 1)
+    W = int(width)
+
+    chains = sched.chains()
+    diag_vals = L.diagonal()
+
+    # per (superstep, core): expand each row into ceil(off_nnz / W) virtual
+    # rows; chain length = sum of virtual rows; superstep step count = max
+    # chain length over cores.
+    step_bounds = [0]
+    vrows: List[List[List[tuple]]] = []  # superstep -> core -> [(row, seg)]
+    for s in range(sched.n_supersteps):
+        per_core: List[List[tuple]] = []
+        for p in range(k):
+            chain = chains.get((s, p), np.empty(0, dtype=np.int64))
+            vr: List[tuple] = []
+            for v in chain:
+                v = int(v)
+                segs = max(1, -(-int(row_nnz_off[v]) // W))
+                for g in range(segs):
+                    vr.append((v, g, g == segs - 1))
+            per_core.append(vr)
+        vrows.append(per_core)
+        step_bounds.append(step_bounds[-1] + max(len(c) for c in per_core))
+
+    T = step_bounds[-1]
+    row_ids = np.full((T, k), n, dtype=np.int32)
+    col_idx = np.zeros((T, k, W), dtype=np.int32)
+    vals = np.zeros((T, k, W), dtype=dtype)
+    diag = np.ones((T, k), dtype=dtype)
+    accum = np.zeros((T, k), dtype=bool)
+    # padding gathers read x[n] (scratch) -> harmless 0 contribution
+    col_idx[:] = n
+
+    for s in range(sched.n_supersteps):
+        base = step_bounds[s]
+        for p in range(k):
+            for t, (v, g, last) in enumerate(vrows[s][p]):
+                cols, values = L.row(v)
+                off = cols != v
+                cols, values = cols[off], values[off]
+                lo, hi = g * W, min((g + 1) * W, len(cols))
+                row_ids[base + t, p] = v
+                col_idx[base + t, p, : hi - lo] = cols[lo:hi]
+                vals[base + t, p, : hi - lo] = values[lo:hi]
+                diag[base + t, p] = diag_vals[v]
+                accum[base + t, p] = not last
+    return ExecPlan(
+        n=n,
+        k=k,
+        W=W,
+        row_ids=row_ids,
+        col_idx=col_idx,
+        vals=vals,
+        diag=diag,
+        accum=accum,
+        step_bounds=np.asarray(step_bounds, dtype=np.int32),
+    )

@@ -1,0 +1,84 @@
+"""Deterministic, shard-aware synthetic LM data pipeline.
+
+Fault-tolerance property that matters at 1000 nodes: the pipeline is a pure
+function of (seed, step, shard) — a restarted job resumes mid-epoch with NO
+pipeline state in the checkpoint, and every data shard produces its slice
+independently (no coordinator). A background prefetch thread keeps one batch
+ahead (the CPU-container stand-in for the host-side input pipeline).
+
+The synthetic stream is a structured Markov-ish token process rather than
+uniform noise, so cross-entropy has learnable signal (examples/train_lm.py
+asserts the loss actually decreases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    shard: int = 0  # data-parallel shard id
+    n_shards: int = 1
+    frontend_positions: int = 0  # for [audio]/[vlm] stubs
+    d_model: int = 0
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Pure function of (seed, step, shard)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard])
+        )
+        # structured stream: tokens follow t_{i+1} = (a*t_i + b + noise) % V
+        a = 1 + 4 * (1 + self.shard)
+        b = rng.integers(1, self.vocab, size=(self.batch, 1))
+        t0 = rng.integers(0, self.vocab, size=(self.batch, 1))
+        toks = [t0]
+        for _ in range(self.seq):
+            nxt = (a * toks[-1] + b) % self.vocab
+            flip = rng.random((self.batch, 1)) < 0.1
+            rand = rng.integers(0, self.vocab, size=(self.batch, 1))
+            toks.append(np.where(flip, rand, nxt))
+        stream = np.concatenate(toks, axis=1)
+        out = {
+            "tokens": jnp.asarray(stream[:, : self.seq], jnp.int32),
+            "labels": jnp.asarray(stream[:, 1 : self.seq + 1], jnp.int32),
+        }
+        if self.frontend_positions:
+            out["frontend_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (self.batch, self.frontend_positions, self.d_model)
+                ),
+                jnp.float32,
+            )
+        return out
+
+    # -- prefetching iterator ------------------------------------------
+    def next_batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        return self.batch_at(step)
+
+    def prefetching(self, start_step: int = 0, depth: int = 2) -> Iterator:
+        q: "queue.Queue" = queue.Queue(maxsize=depth)
+        stop = threading.Event()
+
+        def producer():
+            s = start_step
+            while not stop.is_set():
+                q.put((s, self.batch_at(s)))
+                s += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,13 @@
+from repro.distributed.meshes import (
+    batch_axes,
+    resolve_spec,
+    shardings_for,
+    logical_to_shardings,
+)
+
+__all__ = [
+    "batch_axes",
+    "resolve_spec",
+    "shardings_for",
+    "logical_to_shardings",
+]

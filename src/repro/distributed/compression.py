@@ -1,0 +1,76 @@
+"""Error-feedback gradient compression for the cross-pod hop.
+
+At 2+ pods the gradient all-reduce crosses DCN (slow, ~10x less bandwidth
+than ICI). We compress gradients to int8 with per-block scales before that
+hop and keep the quantization residual in an error-feedback buffer
+(Karimireddy et al.-style EF-SGD): the residual is added back the next step,
+so compression bias does not accumulate and convergence is preserved
+(tests/test_distributed_extras.py trains through it).
+
+``compressed_grad_transform`` plugs into ``make_train_step(grad_transform=…)``:
+the quantize/dequantize pair is algebraically a no-op + bounded noise, so
+the same code is correct on any mesh while modeling the wire format; the
+int8 tensor is what would cross DCN (4x fewer bytes, visible in the HLO of
+the multi-pod dry-run when enabled via REPRO_COMPRESS_GRADS=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. x: any shape (flattened)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, size) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def ef_compress_tree(grads: Pytree, error: Pytree) -> Tuple[Pytree, Pytree]:
+    """(compressed-then-decompressed grads, new error buffers)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s, g32.shape, g32.size)
+        return deq.astype(g.dtype), (g32 - deq)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def init_error_buffers(params: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compressed_grad_transform(error_state: dict) -> Callable[[Pytree], Pytree]:
+    """Stateful-through-closure variant for simple loops (tests/examples).
+    ``error_state['e']`` holds the EF buffers and is updated in place."""
+
+    def transform(grads: Pytree) -> Pytree:
+        new_g, new_e = ef_compress_tree(grads, error_state["e"])
+        error_state["e"] = new_e
+        return new_g
+
+    return transform

@@ -1,0 +1,96 @@
+"""Logical-axis -> physical-mesh sharding resolution.
+
+Model code declares logical axes ('tp', 'fsdp', 'batch', None); this module
+maps them onto whatever mesh is in play:
+
+  single pod  (data=16, model=16):  tp->'model', fsdp->'data', batch->('data',)
+  multi-pod   (pod=2, data=16, model=16): batch->('pod','data'); params stay
+              FSDP-sharded *within* a pod and replicated across pods (the
+              cross-pod hop only carries gradient all-reduces — DCN-friendly).
+
+Divisibility guard: a logical axis is dropped (replicated) for a dimension
+the mesh cannot divide evenly — e.g. 8 kv-heads over 16 'model' devices.
+Model code places 'tp' on the widest safe dimension, so this is a safety
+net, not the primary mechanism.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _physical(mesh: Mesh, logical: Optional[str]):
+    if logical is None:
+        return None
+    if logical == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if logical == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    if logical == "batch":
+        ax = batch_axes(mesh)
+        return ax if ax else None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        out = 1
+        for a in phys:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[phys]
+
+
+def resolve_spec(
+    mesh: Mesh, logical: Tuple[Optional[str], ...], shape: Tuple[int, ...]
+) -> P:
+    """PartitionSpec for one array, dropping non-divisible placements."""
+    entries = []
+    for dim, log in zip(shape, logical):
+        phys = _physical(mesh, log)
+        if phys is not None and dim % _axis_size(mesh, phys) == 0:
+            entries.append(phys)
+        else:
+            entries.append(None)
+    # trailing Nones are implicit
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for(mesh: Mesh, logical_tree: Pytree, shape_tree: Pytree) -> Pytree:
+    """NamedSharding tree for (logical specs, matching shapes)."""
+    is_spec = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        (isinstance(e, str) or e is None) for e in x
+    )
+    return jax.tree_util.tree_map(
+        lambda log, arr: NamedSharding(
+            mesh, resolve_spec(mesh, log, tuple(arr.shape))
+        ),
+        logical_tree,
+        shape_tree,
+        is_leaf=is_spec,
+    )
+
+
+def logical_to_shardings(mesh: Mesh, logical_tree: Pytree, abstract: Pytree) -> Pytree:
+    return shardings_for(mesh, logical_tree, abstract)
+
+
+def activation_spec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    """[B, S, D] residual-stream spec; seq_sharded=True = Megatron-SP style
+    (sequence over 'model' between blocks — the remat-memory lever)."""
+    b = batch_axes(mesh) or None
+    if seq_sharded and "model" in mesh.axis_names:
+        return P(b, "model", None)
+    return P(b, None, None)

@@ -1,0 +1,60 @@
+"""Ambient sharding-constraint context.
+
+Model code is mesh-agnostic; the launcher installs a context with the mesh
+and the activation rules, and model code calls ``constrain(x, role)`` at the
+few load-bearing points (residual stream, microbatch inputs, logits).
+Outside any context (unit tests, single device) it is a no-op.
+
+Roles:
+  residual   [B, S, D]  -> P(batch, *residual_extra)  (seq-sharding lever)
+  tokens     [B, S]     -> P(batch, None)
+  logits     [B, S, V]  -> P(batch, None, 'model')
+  microbatch [M, B, ...]-> P(None, batch, ...)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, seq_sharded: bool = False):
+    from repro.distributed.meshes import batch_axes
+
+    b = batch_axes(mesh)
+    batch = b if b else None
+    seq = "model" if (seq_sharded and "model" in mesh.axis_names) else None
+    rules = {
+        "residual": P(batch, seq, None),
+        "tokens": P(batch, None),
+        "logits": P(batch, None, "model" if "model" in mesh.axis_names else None),
+        "microbatch_tokens": P(None, batch, None),
+        "decode_batch": P(batch),
+    }
+    token = _CTX.set(rules)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    rules = _CTX.get()
+    if rules is None or role not in rules:
+        return x
+    spec = rules[role]
+    # trim the spec to the rank of x (decode tensors drop the seq dim)
+    entries = list(spec)[: x.ndim]
+    entries += [None] * (x.ndim - len(entries))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:  # no ambient mesh — leave unconstrained
+        return x

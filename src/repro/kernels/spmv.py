@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: padded-ELL SpMV — the off-diagonal-block operator of
+the paper's block decomposition (§1.1.4: splitting the triangular matrix
+into diagonal SpTRSV blocks + off-diagonal SpMV blocks; the SpMV part is
+embarrassingly parallel and feeds the next diagonal block's b-vector).
+
+Format: rows padded to W entries (cols self-padded to a scratch slot, vals
+0-padded) — the same convention as the SpTRSV plan. Grid tiles the rows;
+x stays resident in VMEM; each grid step streams an (R, W) tile of indices
+and values and writes an (R,) tile of y. Rows are independent, so the grid
+is parallel ("arbitrary" is not required).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+from repro.sparse.csr import CSRMatrix
+
+
+def _spmv_kernel(col_ref, val_ref, x_ref, y_ref):
+    cols = col_ref[...]  # [R, W]
+    vals = val_ref[...]
+    x = x_ref[...]
+    gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+    y_ref[...] = jnp.sum(vals * gathered, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile", "interpret"))
+def spmv_pallas(col_idx, vals, x_pad, *, rows_per_tile: int = 256,
+                interpret: bool = False):
+    """y = A x for padded-ELL A. col_idx int32[R, W]; vals f[R, W];
+    x_pad f[n+1] (last slot scratch). Returns y f[R]."""
+    R, W = col_idx.shape
+    assert R % rows_per_tile == 0, "pad rows to a multiple of rows_per_tile"
+    grid = (R // rows_per_tile,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_tile, W), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile, W), lambda i: (i, 0)),
+            pl.BlockSpec(x_pad.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), vals.dtype),
+        interpret=interpret,
+    )(col_idx, vals, x_pad)
+
+
+def ell_from_csr(m: CSRMatrix, *, width: int | None = None, dtype=np.float32):
+    """(col_idx int32[R, W], vals f[R, W]) with self-padding to slot n.
+    Wide rows are split into accumulating virtual rows? No — SpMV has no
+    ordering constraint, so wide rows SPLIT into multiple ELL rows and the
+    caller segment-sums (``row_map`` gives the target row of each ELL row)."""
+    W = width or max(int(np.percentile(m.row_nnz(), 95)), 1)
+    col_rows, val_rows, row_map = [], [], []
+    for i in range(m.n_rows):
+        cols, vals = m.row(i)
+        for g in range(0, max(len(cols), 1), W):
+            c = cols[g : g + W]
+            v = vals[g : g + W]
+            cc = np.full(W, m.n_cols, dtype=np.int32)
+            vv = np.zeros(W, dtype=dtype)
+            cc[: len(c)] = c
+            vv[: len(v)] = v
+            col_rows.append(cc)
+            val_rows.append(vv)
+            row_map.append(i)
+    return (
+        np.stack(col_rows).astype(np.int32),
+        np.stack(val_rows),
+        np.asarray(row_map, dtype=np.int32),
+    )
+
+
+def spmv(m: CSRMatrix, x, *, rows_per_tile: int = 256, interpret: bool | None = None,
+         dtype=jnp.float32):
+    """Full SpMV via the kernel: ELL conversion + segment-sum of split rows."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    col_idx, vals, row_map = ell_from_csr(m, dtype=np.dtype(dtype))
+    R = col_idx.shape[0]
+    pad = (-R) % rows_per_tile
+    if pad:
+        col_idx = np.concatenate(
+            [col_idx, np.full((pad, col_idx.shape[1]), m.n_cols, np.int32)]
+        )
+        vals = np.concatenate([vals, np.zeros((pad, vals.shape[1]), vals.dtype)])
+        row_map = np.concatenate([row_map, np.full(pad, m.n_rows, np.int32)])
+    x_pad = jnp.concatenate([jnp.asarray(x, dtype), jnp.zeros(1, dtype)])
+    y_ell = spmv_pallas(
+        jnp.asarray(col_idx), jnp.asarray(vals), x_pad,
+        rows_per_tile=rows_per_tile, interpret=interpret,
+    )
+    return jax.ops.segment_sum(
+        y_ell, jnp.asarray(row_map), num_segments=m.n_rows + 1
+    )[: m.n_rows]

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel for the scheduled SpTRSV executor.
+
+TPU-native design (DESIGN.md §3): the solution vector x lives in VMEM for
+the *entire* solve (input_output_aliasing on a (n+1,)-shaped buffer — 4 MB
+for n = 10^6 in f32, comfortably inside the 16 MB VMEM of a v5e core), while
+the plan tensors (row ids, column indices, values, diagonals) stream
+HBM -> VMEM one lock-step tile at a time via BlockSpecs. One grid step =
+``steps_per_tile`` sequential lock-step rows x k lanes. The grid dimension is
+sequential ("arbitrary"), which *is* the superstep chain: within a chip no
+barrier instruction exists or is needed between grid steps — exactly the
+L ~ 0 regime discussed in the paper's footnote 1.
+
+The k axis is sized to the VPU lane count (128) by the plan compiler for
+best utilization; W is the streamed gather width per row.
+
+Gather: x is addressed with per-lane dynamic indices. We express it as
+``jnp.take(x, cols)`` — Mosaic lowers int32 VMEM gathers natively on
+TPU >= v4 (dynamic-gather); correctness here is validated in interpret mode
+(this container is CPU-only).
+
+Per-row recurrence inside a tile (sequential over the tile's rows):
+    acc   += sum_w vals[t, l, w] * x[col[t, l, w]]
+    x[row] = (b[row] - acc) / diag        (only on non-accum rows)
+The accumulator lives in a VMEM scratch buffer so it survives across grid
+steps (rows wider than W span tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only namespace; absent on CPU builds is fine for interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _sptrsv_kernel(
+    row_ref,  # int32[S, k]        (tile: S = steps_per_tile)
+    col_ref,  # int32[S, k, W]
+    val_ref,  # f[S, k, W]
+    diag_ref,  # f[S, k]
+    accum_ref,  # f[S, k]  (0.0 / 1.0 mask; bool blocks are awkward on TPU)
+    b_ref,  # f[n+1]  (resident)
+    x_in_ref,  # f[n+1]  (the donated zero buffer; same memory as x_ref)
+    x_ref,  # f[n+1]  (aliased in/out, resident)
+    acc_ref,  # f[k] scratch — carries partial sums across tiles
+    *,
+    steps_per_tile: int,
+):
+    del x_in_ref  # aliased with x_ref; all access goes through the output ref
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # x starts as zeros; the aliased input is pre-zeroed by the wrapper.
+
+    def body(t, _):
+        rows = row_ref[t]  # int32[k]
+        cols = col_ref[t]  # int32[k, W]
+        v = val_ref[t]  # f[k, W]
+        d = diag_ref[t]
+        a = accum_ref[t]
+        x = x_ref[...]
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        acc = acc_ref[...] + jnp.sum(v * gathered, axis=-1)
+        b_rows = jnp.take(b_ref[...], rows, axis=0)
+        xv = (b_rows - acc) / d
+        keep = a > 0.5  # still accumulating
+        old = jnp.take(x, rows, axis=0)
+        write = jnp.where(keep, old, xv)
+        x_ref[...] = x.at[rows].set(write)
+        acc_ref[...] = jnp.where(keep, acc, 0.0)
+        return ()
+
+    jax.lax.fori_loop(0, steps_per_tile, body, ())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps_per_tile", "interpret"),
+)
+def sptrsv_pallas(
+    row_ids,  # int32[T, k]
+    col_idx,  # int32[T, k, W]
+    vals,  # f[T, k, W]
+    diag,  # f[T, k]
+    accum_mask,  # f[T, k] (0/1)
+    b_pad,  # f[n+1]
+    *,
+    steps_per_tile: int = 8,
+    interpret: bool = False,
+):
+    """Run the full scheduled solve; returns x f[n+1] (last slot scratch)."""
+    T, k = row_ids.shape
+    W = col_idx.shape[-1]
+    assert T % steps_per_tile == 0, "pad T to a multiple of steps_per_tile"
+    n_tiles = T // steps_per_tile
+    x0 = jnp.zeros_like(b_pad)
+
+    grid = (n_tiles,)
+    tile = lambda *tail: pl.BlockSpec(  # noqa: E731
+        (steps_per_tile, *tail), lambda i: (i, *([0] * len(tail)))
+    )
+    resident = pl.BlockSpec(b_pad.shape, lambda i: (0,))
+
+    kernel = functools.partial(_sptrsv_kernel, steps_per_tile=steps_per_tile)
+    # pltpu.VMEM scratch persists across (sequential) grid steps — the
+    # accumulator for rows split over multiple tiles. Interpret mode honours
+    # it on CPU.
+    assert _VMEM is not None, "pltpu namespace unavailable"
+    scratch_shapes = [_VMEM((k,), vals.dtype)]
+
+    compiler_params = None
+    if not interpret:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),  # sequential grid = chain
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            tile(k),  # row_ids
+            tile(k, W),  # col_idx
+            tile(k, W),  # vals
+            tile(k),  # diag
+            tile(k),  # accum mask
+            resident,  # b
+            resident,  # x0 (aliased with the output)
+        ],
+        out_specs=resident,  # x
+        out_shape=jax.ShapeDtypeStruct(b_pad.shape, vals.dtype),
+        input_output_aliases={6: 0},  # x0 (7th arg) <-> output
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(row_ids, col_idx, vals, diag, accum_mask, b_pad, x0)

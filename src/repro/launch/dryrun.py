@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, print memory_analysis / cost_analysis, and emit the
+roofline terms consumed by EXPERIMENTS.md.
+
+The two lines above MUST stay the first statements of this module: jax locks
+the host device count at first initialization, and this module is the only
+place that may see 512 placeholder devices (tests and benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch sptrsv --shape solve_nb
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Each cell writes experiments/dryrun/<cell>[.mp].json.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.meshes import resolve_spec, batch_axes
+from repro.launch.inputs import (
+    batch_logical,
+    cache_logical,
+    decode_state_shapes,
+    resolve_kv_logical,
+    token_split,
+    train_batch_shapes,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, essential_bytes, model_flops
+from repro.models import abstract_params, logical_specs, param_specs
+from repro.models.decode import decode_step, prefill
+from repro.models.lm import ModelConfig
+from repro.train import AdamWConfig, make_train_step
+from repro.train.train_loop import TrainState, train_state_specs
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+def _abstract_with_sharding(cfg: ModelConfig, mesh, dtype=jnp.bfloat16):
+    """Params as ShapeDtypeStructs with resolved shardings attached."""
+    specs = param_specs(cfg)
+    logical = logical_specs(specs)
+    abstract = abstract_params(specs, dtype=dtype)
+    return jax.tree_util.tree_map(
+        lambda log, a: _sds(a.shape, a.dtype, mesh,
+                            resolve_spec(mesh, log, a.shape)),
+        logical,
+        abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, str) or e is None for e in x
+        ),
+    )
+
+
+def _abstract_state(cfg: ModelConfig, mesh) -> TrainState:
+    p = _abstract_with_sharding(cfg, mesh)
+    f32 = lambda a: _sds(a.shape, jnp.float32, mesh, a.sharding.spec)  # noqa: E731
+    return TrainState(
+        params=p,
+        opt_state={
+            "mu": jax.tree_util.tree_map(f32, p),
+            "nu": jax.tree_util.tree_map(f32, p),
+            "step": _sds((), jnp.int32, mesh, jax.sharding.PartitionSpec()),
+        },
+    )
+
+
+def _batch_sds(cfg: ModelConfig, shape, mesh):
+    shapes = train_batch_shapes(cfg, shape)
+    logical = batch_logical(cfg, shape.kind)
+    out = {}
+    for name, (shp, dt) in shapes.items():
+        spec = resolve_spec(mesh, logical[name], shp)
+        out[name] = _sds(shp, dt, mesh, spec)
+    return out
+
+
+def _microbatches_for(cfg: ModelConfig, shape) -> int:
+    """Gradient-accumulation depth per cell: keep per-microbatch activation
+    memory bounded. Scales with parameter width (the §Perf memory lever)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 12000:
+        return 16
+    if cfg.d_model >= 5000:
+        return 8
+    if cfg.d_model >= 4000:
+        return 4
+    return 2
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """Returns (lowered, compiled, meta) for one cell."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    wkv_chunk = int(os.environ.get("REPRO_WKV_CHUNK", "0"))
+    if wkv_chunk and cfg.family == "rwkv6":
+        cfg = _dc.replace(cfg, wkv_chunk=wkv_chunk)
+    if os.environ.get("REPRO_NO_REMAT"):
+        cfg = _dc.replace(cfg, remat=False)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return None, None, {"skipped": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    from repro.distributed.sharding_ctx import activation_sharding
+
+    seq_sharded = bool(int(os.environ.get("REPRO_SEQ_SHARD", "0")))
+    if shape.kind == "train":
+        state = _abstract_state(cfg, mesh)
+        batch = _batch_sds(cfg, shape, mesh)
+        mb = _microbatches_for(cfg, shape)
+        step = make_train_step(
+            cfg,
+            AdamWConfig(),
+            microbatches=mb,
+        )
+        with mesh, activation_sharding(mesh, seq_sharded=seq_sharded):
+            lowered = jax.jit(step).lower(state, batch)
+    elif shape.kind == "prefill":
+        params = _abstract_with_sharding(cfg, mesh)
+        batch = _batch_sds(cfg, shape, mesh)
+        fn = lambda p, b: prefill(cfg, p, b, max_len=shape.seq_len)  # noqa: E731
+        with mesh, activation_sharding(mesh, seq_sharded=seq_sharded):
+            lowered = jax.jit(fn).lower(params, batch)
+    else:  # decode
+        params = _abstract_with_sharding(cfg, mesh)
+        cache_shapes, (tok_shape, tok_dt) = decode_state_shapes(cfg, shape)
+        clog = cache_logical(cfg)
+        cache = jax.tree_util.tree_map(
+            lambda log, a: _sds(
+                a.shape, a.dtype, mesh, resolve_kv_logical(mesh, log, a.shape)
+            ),
+            clog,
+            cache_shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, str) or e is None for e in x
+            ),
+        )
+        tok = _sds(tok_shape, tok_dt, mesh,
+                   resolve_spec(mesh, ("batch",), tok_shape))
+        pos = _sds((), jnp.int32, mesh, jax.sharding.PartitionSpec())
+        fn = lambda p, c, ps, t: decode_step(cfg, p, c, ps, t)  # noqa: E731
+        with mesh, activation_sharding(mesh):
+            lowered = jax.jit(fn).lower(params, cache, pos, tok)
+
+    compiled = lowered.compile()
+    return lowered, compiled, {"chips": chips, "mesh": dict(mesh.shape)}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True) -> dict:
+    t0 = time.time()
+    tag = f"{arch}.{shape_name}" + (".mp" if multi_pod else "")
+    try:
+        lowered, compiled, meta = lower_cell(
+            arch, shape_name, multi_pod=multi_pod
+        )
+    except Exception as e:  # noqa: BLE001
+        result = {
+            "cell": tag, "status": "ERROR",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+        _save(result, tag, save)
+        return result
+
+    if lowered is None:
+        result = {"cell": tag, "status": "SKIP", "reason": meta["skipped"]}
+        _save(result, tag, save)
+        return result
+
+    hlo = compiled.as_text()
+    terms = roofline_terms(compiled, hlo, meta["chips"])
+    mem_d = _memory_dict(compiled)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_params, n_active = _param_counts(cfg)
+    mf = model_flops(cfg, shape, n_params, n_active)
+    hlo_total_flops = terms["flops"] * meta["chips"]
+    ess = essential_bytes(
+        cfg, shape, n_params, meta["chips"],
+        microbatches=_microbatches_for(cfg, shape),
+        tp=meta["mesh"].get("model", 1),
+    )
+    terms["essential_bytes"] = ess
+    terms["t_memory_lb_s"] = ess / HBM_BW
+
+    result = {
+        "cell": tag,
+        "status": "OK",
+        "mesh": meta["mesh"],
+        "chips": meta["chips"],
+        "compile_s": round(time.time() - t0, 1),
+        "roofline": terms,
+        "memory_analysis": mem_d,
+        "model_flops": mf,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "useful_flops_ratio": (mf / hlo_total_flops) if hlo_total_flops else None,
+    }
+    _save(result, tag, save)
+    return result
+
+
+def _memory_dict(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            mem_d[attr] = int(getattr(mem, attr))
+        except Exception:  # noqa: BLE001
+            pass
+    return mem_d
+
+
+def roofline_terms(compiled, hlo_text: str, chips: int) -> dict:
+    """Trip-count-aware roofline terms (per device) + raw XLA numbers."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+    cost = analyze_hlo(hlo_text)
+    xla = compiled.cost_analysis()
+    if isinstance(xla, list):
+        xla = xla[0]
+    t_comp = cost.flops / PEAK_FLOPS
+    t_mem = cost.hbm_bytes / HBM_BW
+    t_coll = cost.collective_bytes / ICI_BW
+    terms = {
+        "flops": cost.flops,
+        "bytes_accessed": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": max(
+            [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+            key=lambda kv: kv[1],
+        )[0],
+        "collective_counts": cost.collective_counts,
+        "collective_byte_detail": cost.collective_byte_detail,
+        "xla_raw_flops": float(xla.get("flops", 0.0)),
+        "xla_raw_bytes": float(xla.get("bytes accessed", 0.0)),
+    }
+    return terms
+
+
+def _param_counts(cfg: ModelConfig):
+    """(total, active) parameter counts from the abstract tree."""
+    ab = abstract_params(param_specs(cfg))
+    total = sum(int(np.prod(a.shape)) for a in jax.tree_util.tree_leaves(ab))
+    active = total
+    if cfg.moe is not None:
+        # routed experts contribute top_k/n_experts of their params per token
+        moe_leaves = 0
+        specs = param_specs(cfg)
+        for name in ("w_gate", "w_up", "w_down"):
+            leaf = specs["layers"]["moe"][name]
+            moe_leaves += int(np.prod(leaf.shape))
+        active = total - moe_leaves + int(
+            moe_leaves * cfg.moe.top_k / cfg.moe.n_experts
+        )
+    return total, active
+
+
+def _save(result: dict, tag: str, save: bool):
+    line = (
+        f"[{result['status']}] {tag}"
+        + (f" compile={result.get('compile_s')}s" if "compile_s" in result else "")
+    )
+    print(line, flush=True)
+    if result["status"] == "OK":
+        r = result["roofline"]
+        print(
+            f"    t_comp={r['t_compute_s']:.3e}s t_mem={r['t_memory_s']:.3e}s "
+            f"t_coll={r['t_collective_s']:.3e}s dominant={r['dominant']}",
+            flush=True,
+        )
+        print(f"    memory/device: {result['memory_analysis']}", flush=True)
+    elif result["status"] == "ERROR":
+        print("    " + result["error"], flush=True)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        (OUT_DIR / f"{tag}.json").write_text(json.dumps(result, indent=1))
+
+
+# ---------------------------------------------------------------------------
+# the paper's own workload as dry-run cells
+# ---------------------------------------------------------------------------
+SPTRSV_SHAPES = {
+    # (n, kind, params, batch): batch = #RHS sharded over 'data'
+    "solve_er100k": dict(n=100_000, kind="er", p=5e-5, batch=16),
+    "solve_nb100k": dict(n=100_000, kind="nb", p=0.14, band=10.0, batch=16),
+}
+
+
+def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
+                    save: bool = True) -> dict:
+    from repro.core import apply_reordering, compile_plan, grow_local
+    from repro.solver.distributed import dist_plan_spec, lower_distributed_solve
+    from repro.sparse import dag_from_lower_csr, erdos_renyi_lower, narrow_band_lower
+
+    t0 = time.time()
+    tag = f"sptrsv.{shape_name}" + (".mp" if multi_pod else "")
+    spec = SPTRSV_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    k = mesh.shape["model"]
+
+    if spec["kind"] == "er":
+        L = erdos_renyi_lower(spec["n"], spec["p"], seed=1)
+    else:
+        L = narrow_band_lower(spec["n"], spec["p"], spec["band"], seed=1)
+    dag = dag_from_lower_csr(L)
+    sched = grow_local(dag, k)
+    L2, s2, _, _ = apply_reordering(L, sched)
+    plan = compile_plan(L2, s2)
+    dspec = dist_plan_spec(plan, batch=spec["batch"])
+    try:
+        with mesh:
+            lowered = lower_distributed_solve(dspec, mesh)
+            compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001
+        result = {"cell": tag, "status": "ERROR",
+                  "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+        _save(result, tag, save)
+        return result
+    hlo = compiled.as_text()
+    terms = roofline_terms(compiled, hlo, chips)
+    mem_d = _memory_dict(compiled)
+    result = {
+        "cell": tag, "status": "OK", "mesh": dict(mesh.shape), "chips": chips,
+        "compile_s": round(time.time() - t0, 1),
+        "roofline": terms,
+        "memory_analysis": mem_d,
+        "supersteps": s2.n_supersteps,
+        "plan": plan.stats(),
+        "nnz": L.nnz,
+        # useful flops: 2 per off-diagonal nnz + 1 divide per row
+        "model_flops": float(2 * (L.nnz - L.n_rows) + L.n_rows) * spec["batch"],
+    }
+    _save(result, tag, save)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                run_cell(arch, shape, multi_pod=args.multi_pod)
+        for shape in SPTRSV_SHAPES:
+            run_sptrsv_cell(shape, multi_pod=args.multi_pod)
+        return
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    if args.arch == "sptrsv":
+        run_sptrsv_cell(args.shape, multi_pod=args.multi_pod)
+    else:
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Input construction for every (arch × shape) cell — both as
+ShapeDtypeStructs (dry-run; no allocation) and as real arrays (smoke tests,
+examples).
+
+Frontend stubs (by assignment): [audio] gets precomputed frame embeddings
+(T_frames = seq_len / 4 — a conv subsampler's output rate), [vlm] gets
+anyres patch embeddings (2880 patches) that occupy the first positions of
+the sequence; text tokens fill the rest.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeConfig
+from repro.models.decode import init_decode_cache
+from repro.models.lm import ModelConfig
+
+Pytree = Any
+
+VLM_PATCHES = 2880  # anyres: 4 tiles + base thumbnail, 576 each
+AUDIO_SUBSAMPLE = 4
+
+
+def token_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(frontend positions, text positions) summing to seq_len."""
+    if cfg.frontend == "vision":
+        p = min(VLM_PATCHES, seq_len // 2)
+        return p, seq_len - p
+    if cfg.family == "encdec":
+        return seq_len // AUDIO_SUBSAMPLE, seq_len
+    return 0, seq_len
+
+
+def train_batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    B, S = shape.global_batch, shape.seq_len
+    p, t = token_split(cfg, S)
+    out = {"tokens": ((B, t), np.int32), "labels": ((B, t), np.int32)}
+    if p:
+        out["frontend_embeds"] = ((B, p, cfg.d_model), np.float32)
+    return out
+
+
+def make_train_batch(
+    cfg: ModelConfig, *, batch: int, seq_len: int, seed: int = 0
+) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    p, t = token_split(cfg, seq_len)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, t)), jnp.int32
+        ),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, t)), jnp.int32
+        ),
+    }
+    if p:
+        out["frontend_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, p, cfg.d_model)), jnp.float32
+        )
+    return out
+
+
+def decode_state_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache shapes via eval_shape, token/pos shapes) for decode cells."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S // AUDIO_SUBSAMPLE if cfg.family == "encdec" else 0
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, B, S, enc_len=enc_len)
+    )
+    return cache, ((B,), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# logical shardings for inputs/caches
+# ---------------------------------------------------------------------------
+def batch_logical(cfg: ModelConfig, shape_kind: str) -> Dict[str, tuple]:
+    out = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+    }
+    if cfg.frontend == "vision" or cfg.family == "encdec":
+        out["frontend_embeds"] = ("batch", None, None)
+    return out
+
+
+def cache_logical(cfg: ModelConfig) -> Pytree:
+    """Logical axes for every cache leaf (structure mirrors
+    init_decode_cache).
+
+    KV caches shard on the SEQUENCE dim: attention contracts over Dh and
+    softmaxes over S, and with S sharded both einsums stay local (only the
+    flash-style softmax stats cross the wire). Head/Dh sharding was tried
+    first and refuted — XLA resolved the Dh-sharded contraction by
+    all-gathering the whole cache every layer (EXPERIMENTS.md §Perf,
+    granite decode iterations)."""
+    kv = (None, "batch", "tp", None, None)  # shard the sequence/slots dim
+
+    def kv_spec():
+        return kv
+
+    if cfg.family in ("dense", "moe"):
+        return {"k": kv_spec(), "v": kv_spec()}
+    if cfg.family == "rwkv6":
+        return {
+            "shift_tm": (None, "batch", None, "tp"),
+            "wkv": (None, "batch", "tp", None, None),
+            "shift_cm": (None, "batch", None, "tp"),
+        }
+    if cfg.family == "hybrid":
+        rec = {"conv": (None, "batch", None, "tp"), "h": (None, "batch", "tp")}
+        out = {
+            "super": {
+                "rec1": dict(rec),
+                "rec2": dict(rec),
+                "attn": {"k": kv_spec(), "v": kv_spec()},
+            }
+        }
+        if cfg.n_layers % 3:
+            out["tail"] = dict(rec)
+        return out
+    if cfg.family == "encdec":
+        return {"k": kv_spec(), "v": kv_spec(), "xk": kv_spec(), "xv": kv_spec()}
+    raise ValueError(cfg.family)
+
+
+def resolve_kv_logical(mesh, logical, shape):
+    """Special-case 'tp2': place 'model' on the kv-head dim when divisible,
+    otherwise on head_dim ('tp2' slot)."""
+    from repro.distributed.meshes import resolve_spec
+
+    if "tp2" not in logical:
+        return resolve_spec(mesh, logical, shape)
+    heads_dim = logical.index("tp")
+    hd_dim = logical.index("tp2")
+    model_size = mesh.shape.get("model", 1)
+    use_heads = shape[heads_dim] % model_size == 0
+    fixed = tuple(
+        (
+            "tp"
+            if (i == heads_dim and use_heads) or (i == hd_dim and not use_heads)
+            else (None if i in (heads_dim, hd_dim) else ax)
+        )
+        for i, ax in enumerate(logical)
+    )
+    return resolve_spec(mesh, fixed, shape)

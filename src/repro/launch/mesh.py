@@ -1,0 +1,28 @@
+"""Production meshes.
+
+make_production_mesh() is a FUNCTION (never a module-level constant) so that
+importing this module does not touch jax device state — the 512-placeholder
+device trick in dryrun.py depends on being able to set XLA_FLAGS before the
+first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model: int = 1, data: int = 1):
+    """Small mesh for tests/examples on host devices."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,65 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--mp]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def fmt_s(x):
+    return f"{x:.3e}" if x is not None else "-"
+
+
+def load(mp: bool):
+    rows = []
+    for f in sorted(OUT_DIR.glob("*.json")):
+        is_mp = f.stem.endswith(".mp")
+        if is_mp != mp:
+            continue
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mp", action="store_true")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mp)
+    hdr = (
+        "| cell | status | t_comp (s) | t_mem (s) | t_mem_lb (s) | "
+        "t_coll (s) | dominant | useful-FLOP ratio | bytes/chip (temp) | "
+        "roofline frac |"
+    )
+    print(hdr)
+    print("|" + "---|" * 10)
+    for r in rows:
+        if r["status"] == "SKIP":
+            print(f"| {r['cell']} | SKIP ({r['reason'][:40]}…) |" + " - |" * 8)
+            continue
+        if r["status"] != "OK":
+            print(f"| {r['cell']} | ERROR |" + " - |" * 8)
+            continue
+        t = r["roofline"]
+        dom = t["dominant"]
+        dom_t = t[f"t_{dom}_s" if dom != "memory" else "t_memory_s"]
+        # roofline fraction: compute term / dominant term — how close the
+        # cell is to being compute-bound at peak
+        frac = t["t_compute_s"] / max(dom_t, 1e-30)
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes")
+        print(
+            f"| {r['cell']} | OK | {fmt_s(t['t_compute_s'])} | "
+            f"{fmt_s(t['t_memory_s'])} | {fmt_s(t.get('t_memory_lb_s'))} | "
+            f"{fmt_s(t['t_collective_s'])} | {dom} | "
+            f"{(r.get('useful_flops_ratio') or 0):.2f} | "
+            f"{(temp or 0)/1e9:.1f} GB | {frac:.3f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

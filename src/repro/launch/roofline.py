@@ -1,0 +1,191 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms, per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs            / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips * 819e9  B/s HBM)
+  collective = collective_bytes     / (chips * 50e9   B/s per ICI link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). collective_bytes is
+not in cost_analysis: we parse the optimized HLO text and sum operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. MODEL_FLOPS (6·N·D dense, 6·N_active·D MoE) is computed from configs
+for the usefulness ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096]' -> bytes. Tuple shapes handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Lines look like:
+      %ag = bf16[16,512,128] all-gather(%x), replica_groups=...
+    The LHS shape is the op's output — a good proxy for the wire bytes
+    (all-gather output = full gathered tensor, all-reduce output = tensor
+    reduced, etc.). Fusions never contain collectives, so a line scan
+    suffices on optimized HLO."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            # match the op name as `= <shape> op-name(` — avoids matching
+            # metadata or variable names, and skips `-start/-done` pairs
+            # being double counted (we count only `-start` when present).
+            if f" {coll}(" in stripped or f" {coll}-start(" in stripped:
+                lhs = stripped.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                # output shape(s) appear between '=' and the op name
+                rhs = lhs[1]
+                op_pos = rhs.find(coll)
+                shape_part = rhs[:op_pos]
+                out[coll] += _shape_bytes(shape_part)
+                counts[coll] += 1
+                break
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    collective_detail: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    colls = collective_bytes_from_hlo(hlo_text)
+    counts = colls.pop("_counts")
+    return RooflineTerms(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=float(sum(colls.values())),
+        chips=chips,
+        collective_detail={"bytes": colls, "counts": counts},
+    )
+
+
+def essential_bytes(cfg, shape, n_params: int, chips: int, microbatches: int = 1,
+                    tp: int = 16) -> float:
+    """Analytic LOWER BOUND on per-chip HBM traffic (bytes): weight reads,
+    optimizer state r/w, saved residual w+r, logits, decode-cache traffic.
+    The HLO-derived number is the matching UPPER bound (it inherits the CPU
+    backend's finer fusion granularity); real TPU traffic lies between."""
+    P = float(n_params)
+    D, V = cfg.d_model, cfg.padded_vocab
+    B, S = shape.global_batch, shape.seq_len
+    dp = max(chips // tp, 1)
+    w_bf16 = 2 * P / tp  # per-chip bytes of one full weight sweep (TP shard)
+    if shape.kind == "train":
+        M = microbatches
+        weights = 3.0 * M * w_bf16  # fwd + remat-fwd + bwd
+        opt = (4 * 2 + 4 * 2 + 2 + 4) * P / chips  # m,v r/w + param w + grad
+        resid = 2.0 * (cfg.n_layers * M * (B / M) * S * D * 2 / dp)
+        logits = 2.0 * (B * S * V * 2 / chips)
+        return weights + opt + resid + logits
+    if shape.kind == "prefill":
+        weights = w_bf16
+        resid = 2.0 * cfg.n_layers * B * S * D * 2 / dp
+        cache_w = 2.0 * B * S * cfg.n_kv_heads * cfg.hd * 2 * cfg.n_layers / dp
+        return weights + resid + cache_w
+    # decode: weights once + cache read/write
+    weights = w_bf16
+    C = min(S, cfg.window) if cfg.window else S
+    if cfg.family == "rwkv6":
+        cache = B * cfg.n_layers * (cfg.d_model * (cfg.d_model // cfg.n_heads)) * 4
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // 3
+        cache = B * (n_super * cfg.local_window * cfg.n_kv_heads * cfg.hd * 2 * 2
+                     + cfg.n_layers * (cfg.d_rnn or D) * 4)
+    else:
+        cache = 2 * B * C * cfg.n_kv_heads * cfg.hd * 2 * cfg.n_layers
+    return weights + 2.0 * cache / chips
+
+
+def model_flops(cfg, shape, n_params: int, n_active_params: Optional[int] = None):
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for inference forward passes."""
+    n = n_active_params if n_active_params is not None else n_params
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * 1 * shape.global_batch  # decode: one token

@@ -1,0 +1,69 @@
+"""Serving launcher: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
+        [--reduced] [--batch 4] [--prompt-len 64] [--new-tokens 32]
+
+On the container this drives reduced configs on CPU; the same entry point
+drives full configs over make_production_mesh() on a real cluster (the
+decode_32k / long_500k dry-run cells lower exactly this step function).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch.inputs import make_train_batch
+from repro.models import decode_step, init_params, param_specs, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"[serve] arch={cfg.name} family={cfg.family} "
+          f"batch={args.batch} prompt={args.prompt_len}")
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0),
+                         dtype=jnp.float32)
+    batch = make_train_batch(cfg, batch=args.batch, seq_len=args.prompt_len,
+                             seed=0)
+    max_len = args.prompt_len + args.new_tokens
+
+    prefill_fn = jax.jit(lambda p, b: prefill(cfg, p, b, max_len=max_len))
+    decode_fn = jax.jit(lambda p, c, pos, t: decode_step(cfg, p, c, pos, t))
+
+    t0 = time.time()
+    logits, cache, pos = prefill_fn(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    token = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [np.asarray(token)]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode_fn(params, cache,
+                                  jnp.asarray(pos + i, jnp.int32), token)
+        token = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(np.asarray(token))
+    token.block_until_ready()
+    t_tok = (time.time() - t0) / max(args.new_tokens - 1, 1)
+    seqs = np.stack(out, axis=1)
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms, decode "
+          f"{t_tok*1e3:.1f} ms/token")
+    for b in range(min(args.batch, 2)):
+        print(f"  request {b}: {seqs[b][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

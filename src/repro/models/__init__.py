@@ -1,0 +1,16 @@
+from repro.models.lm import ModelConfig, forward, loss_fn, param_specs
+from repro.models.common import abstract_params, init_params, logical_specs
+from repro.models.decode import decode_step, init_decode_cache, prefill
+
+__all__ = [
+    "ModelConfig",
+    "forward",
+    "loss_fn",
+    "param_specs",
+    "abstract_params",
+    "init_params",
+    "logical_specs",
+    "decode_step",
+    "init_decode_cache",
+    "prefill",
+]

@@ -1,0 +1,219 @@
+"""Attention: GQA / MHA, sliding-window, local, qk-norm, cross-attention,
+and the KV-cache decode path.
+
+Layout conventions: activations [B, S, D]; per-head tensors [B, S, H, Dh];
+caches [B, S_max, Hkv, Dh]. Heads are the TP axis; the batch is the DP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    window: Optional[int] = None  # sliding-window size (None = full)
+    causal: bool = True
+    rope: bool = True
+    rope_theta: float = 10000.0
+
+
+def attn_param_specs(cfg: AttnConfig):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((D, H, Dh), ("fsdp", "tp", None)),
+        "wk": ParamSpec((D, Hkv, Dh), ("fsdp", "tp", None)),
+        "wv": ParamSpec((D, Hkv, Dh), ("fsdp", "tp", None)),
+        "wo": ParamSpec((H, Dh, D), ("tp", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((Dh,), (None,), init="ones")
+        specs["k_norm"] = ParamSpec((Dh,), (None,), init="ones")
+    return specs
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, Hkv, Dh] -> [B, S, H, Dh] by repeating each kv head."""
+    hkv = k.shape[-2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=-2)
+
+
+def _causal_window_mask(
+    q_len: int, kv_len: int, window: Optional[int], causal: bool, q_offset: int = 0
+):
+    """bool[q_len, kv_len]: True = attendable."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def _chunked_attention(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,  # [B, T, H, Dh]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    kv_chunk: int,
+) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with running max/sum in
+    f32. Memory O(B*H*S*kv_chunk) instead of O(B*H*S*T) — this is what makes
+    the 32k-prefill cells feasible (DESIGN.md; §Perf memory-term lever)."""
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    assert T % kv_chunk == 0, "pad kv length to a multiple of kv_chunk"
+    n_chunks = T // kv_chunk
+    scale = Dh ** -0.5
+    q32 = (q * scale).astype(jnp.float32)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)[:, None]
+
+    def step(carry, inp):
+        m, l, acc = carry  # [B,H,S], [B,H,S], [B,S,H,Dh]
+        kb, vb, idx = inp  # [B,C,H,Dh], [B,C,H,Dh], scalar chunk index
+        logits = jnp.einsum("bshk,bthk->bhst", q32, kb.astype(jnp.float32))
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((S, kv_chunk), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        correction = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * correction + p.sum(axis=-1)
+        acc = acc * correction.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhst,bthk->bshk", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    acc0 = jnp.zeros((B, S, H, Dh), jnp.float32)
+    # remat the chunk step: the flash backward recomputes the [B,H,S,C]
+    # probabilities per chunk instead of stacking them across chunks
+    # (without this, scan-of-bwd saves n_chunks x B*H*S*C floats).
+    step_r = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(
+        step_r, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def multi_head_attention(
+    params,
+    cfg: AttnConfig,
+    x: jax.Array,
+    *,
+    rope_cos: Optional[jax.Array] = None,
+    rope_sin: Optional[jax.Array] = None,
+    kv_source: Optional[jax.Array] = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill), flash-style chunked.
+    ``kv_source`` switches to cross-attention (encoder outputs)."""
+    B, S, _ = x.shape
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.rope and kv_source is None:
+        q = apply_rope(q, rope_cos, rope_sin)
+        k = apply_rope(k, rope_cos, rope_sin)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    causal = cfg.causal and kv_source is None
+    window = cfg.window if kv_source is None else None
+    chunk = min(kv_chunk, src.shape[1])
+    out = _chunked_attention(
+        q, k, v, causal=causal, window=window, kv_chunk=chunk
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(
+    params,
+    cfg: AttnConfig,
+    x: jax.Array,  # [B, 1, D]
+    cache,  # {"k","v": [B, S_max, Hkv, Dh]}
+    pos: jax.Array,  # scalar int32 — current position
+    *,
+    rope_cos: Optional[jax.Array] = None,  # [1, Dh/2] at pos
+    rope_sin: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One-token decode with cache update. For sliding-window configs the
+    cache is a ring buffer of size window (cache length == window)."""
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.rope:
+        q = apply_rope(q, rope_cos, rope_sin)
+        k = apply_rope(k, rope_cos, rope_sin)
+    slot = pos % S_max if cfg.window is not None else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    # Grouped GQA einsums: q reshaped to [B,1,Hkv,G,Dh] contracts against
+    # the cache directly — never materialize the H-expanded KV. (Expanding
+    # repeats the kv-head dim 8->32, which breaks the cache's sharded
+    # layout and forced a full-cache all-gather per layer: the dominant
+    # collective of the decode cells before this change — EXPERIMENTS.md
+    # §Perf, granite decode iteration.)
+    Hkv = cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, G, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bshgk,bthk->bhgst", qg, ck) * scale  # [B,Hkv,G,1,S]
+    t_pos = jnp.arange(S_max)
+    if cfg.window is not None:
+        # ring buffer of size == window: before wrap-around only slots
+        # <= pos hold tokens; after wrap-around every slot is live.
+        valid = (t_pos <= pos) | (pos >= S_max)
+    else:
+        valid = t_pos <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgst,bthk->bshgk", probs, cv)
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out.reshape(B, 1, cfg.n_heads, cfg.head_dim),
+        params["wo"],
+    )
+    return y, {"k": ck, "v": cv}

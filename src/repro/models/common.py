@@ -1,0 +1,131 @@
+"""Shared model building blocks: parameter specs, norms, RoPE, MLPs, losses.
+
+No flax — parameters are plain pytrees of jax.Arrays, and every parameter
+carries a *logical* PartitionSpec built from the placeholder axis names
+  'tp'    -> the tensor-parallel mesh axis ('model')
+  'fsdp'  -> the fully-sharded-data-parallel axis ('data')
+  'batch' -> the data-parallel activation axes (('pod','data') on the
+             multi-pod mesh, ('data',) on a single pod)
+which ``repro.distributed.meshes.resolve_spec`` maps to physical axes.
+This keeps model code mesh-agnostic (1000-node posture: the same model file
+serves any mesh topology).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # logical sharding per dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical)
+
+
+def build_param_specs(tree: Pytree) -> Pytree:
+    """Identity helper for readability at call sites."""
+    return tree
+
+
+def init_params(specs: Pytree, key: jax.Array, dtype=jnp.bfloat16) -> Pytree:
+    """Materialize parameters from a ParamSpec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+            std = spec.scale / np.sqrt(fan_in)
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs: Pytree, dtype=jnp.bfloat16) -> Pytree:
+    """ShapeDtypeStruct tree — the dry-run path (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_specs(specs: Pytree) -> Pytree:
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree_util.tree_map(
+        lambda s: s.logical,
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    t = np.arange(max_pos, dtype=np.float32)
+    freqs = np.outer(t, inv)  # [max_pos, half]
+    return jnp.asarray(np.cos(freqs)), jnp.asarray(np.sin(freqs))
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, D]; cos/sin: [S, D/2] (or [1, D/2] for decode).
+    Rotation runs in f32 (tables are f32) and casts back to x.dtype."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., :, None, :]  # broadcast over heads
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    return jnp.einsum(
+        "...f,fd->...d", jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up)), w_down
+    )
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean token CE in f32. logits [..., V]; labels int[...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

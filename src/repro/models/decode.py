@@ -1,0 +1,461 @@
+"""Prefill + single-token decode for every model family.
+
+Cache layouts (stacked over the scanned layer dimension):
+  dense/moe : {"k","v": [L, B, C, Hkv, Dh]}   C = min(max_len, window)
+  rwkv6     : {"shift_tm": [L,B,1,D], "wkv": [L,B,H,Dh,Dh], "shift_cm": [L,B,1,D]}
+  hybrid    : per-superblock {rec1/rec2: conv [Sb,B,3,R] + h [Sb,B,R],
+              attn: ring k/v [Sb,B,W,Hkv,Dh]} (+ tail states)
+  encdec    : decoder self k/v [L,B,C,...] + per-layer cross k/v
+              [L,B,T_enc,...] precomputed from the encoder output.
+
+Sliding-window caches are ring buffers (slot = pos % window) — constant
+memory, which is what lets mixtral / recurrentgemma / rwkv6 run the
+``long_500k`` cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    AttnConfig,
+    apply_rope,
+    decode_attention,
+    multi_head_attention,
+    _expand_kv,
+    _chunked_attention,
+)
+from repro.models.common import rms_norm, swiglu
+from repro.models.lm import ModelConfig, _embed_inputs, _embed_tokens, _rope_tables
+from repro.models.moe import moe_ffn
+from repro.models.rglru import rglru_block
+from repro.models.rwkv6 import channel_mix, time_mix
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _ring_fill(k: jax.Array, cache_len: int) -> jax.Array:
+    """Place the last ``cache_len`` tokens of k [B,S,...] into ring slots
+    (slot = absolute_pos % cache_len)."""
+    S = k.shape[1]
+    if S <= cache_len:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, cache_len - S)
+        return jnp.pad(k, pad)
+    tail = k[:, -cache_len:]
+    slots = (jnp.arange(S - cache_len, S)) % cache_len
+    out = jnp.zeros((k.shape[0], cache_len, *k.shape[2:]), k.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def _attn_prefill(
+    params, acfg: AttnConfig, x, cos, sin, cache_len: int, kv_chunk: int
+):
+    """Attention over the full prompt; returns (out, k_cache, v_cache)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if acfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if acfg.rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ke = _expand_kv(k, acfg.n_heads)
+    ve = _expand_kv(v, acfg.n_heads)
+    out = _chunked_attention(
+        q, ke, ve, causal=acfg.causal, window=acfg.window,
+        kv_chunk=min(kv_chunk, x.shape[1]),
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, _ring_fill(k, cache_len), _ring_fill(v, cache_len)
+
+
+def _cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+# ---------------------------------------------------------------------------
+# dense / moe
+# ---------------------------------------------------------------------------
+def _dense_prefill(cfg: ModelConfig, params, batch, max_len: int):
+    h = _embed_inputs(cfg, params, batch)
+    B, S, _ = h.shape
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+    C = _cache_len(cfg, max_len)
+    is_moe = cfg.family == "moe"
+
+    def layer(h, lp):
+        a, kc, vc = _attn_prefill(
+            lp["attn"], cfg.attn_cfg(), rms_norm(h, lp["ln1"], cfg.norm_eps),
+            cos, sin, C, cfg.attn_kv_chunk,
+        )
+        h = h + a
+        ff_in = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            ff, _ = moe_ffn(lp["moe"], cfg.moe, ff_in)
+        else:
+            ff = swiglu(ff_in, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                        lp["mlp"]["w_down"])
+        return h + ff, {"k": kc, "v": vc}
+
+    h, cache = jax.lax.scan(layer, h, params["layers"])
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    return logits, cache, S
+
+
+def _dense_decode(cfg: ModelConfig, params, cache, pos, token):
+    h = _embed_tokens(cfg, params, token[:, None])  # [B,1,D]
+    cos, sin = _rope_tables(cfg, pos[None])
+    is_moe = cfg.family == "moe"
+
+    def layer(h, inp):
+        lp, kv = inp
+        a, kv2 = decode_attention(
+            lp["attn"], cfg.attn_cfg(), rms_norm(h, lp["ln1"], cfg.norm_eps),
+            kv, pos, rope_cos=cos, rope_sin=sin,
+        )
+        h = h + a
+        ff_in = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            # single group of B tokens for decode dispatch
+            ff, _ = moe_ffn(lp["moe"], cfg.moe, ff_in.transpose(1, 0, 2))
+            ff = ff.transpose(1, 0, 2)
+        else:
+            ff = swiglu(ff_in, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                        lp["mlp"]["w_down"])
+        return h + ff, kv2
+
+    h, cache = jax.lax.scan(layer, h, (params["layers"], cache))
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["unembed"])
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+def _rwkv_prefill(cfg: ModelConfig, params, batch, max_len: int):
+    del max_len  # constant-size state
+    h = _embed_inputs(cfg, params, batch)
+    rc = cfg.rwkv_cfg()
+
+    def layer(h, lp):
+        y, (sx_tm, wkv) = time_mix(
+            lp["time_mix"], rc, rms_norm(h, lp["ln1"], cfg.norm_eps),
+            chunk=cfg.wkv_chunk,
+        )
+        h = h + y
+        y, sx_cm = channel_mix(
+            lp["channel_mix"], rc, rms_norm(h, lp["ln2"], cfg.norm_eps)
+        )
+        return h + y, {"shift_tm": sx_tm, "wkv": wkv, "shift_cm": sx_cm}
+
+    h, cache = jax.lax.scan(layer, h, params["layers"])
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    return logits, cache, h.shape[1]
+
+
+def _rwkv_decode(cfg: ModelConfig, params, cache, pos, token):
+    del pos
+    h = _embed_tokens(cfg, params, token[:, None])
+    rc = cfg.rwkv_cfg()
+
+    def layer(h, inp):
+        lp, st = inp
+        y, (sx_tm, wkv) = time_mix(
+            lp["time_mix"], rc, rms_norm(h, lp["ln1"], cfg.norm_eps),
+            shift_prev=st["shift_tm"], state=st["wkv"],
+        )
+        h = h + y
+        y, sx_cm = channel_mix(
+            lp["channel_mix"], rc, rms_norm(h, lp["ln2"], cfg.norm_eps),
+            shift_prev=st["shift_cm"],
+        )
+        return h + y, {"shift_tm": sx_tm, "wkv": wkv, "shift_cm": sx_cm}
+
+    h, cache = jax.lax.scan(layer, h, (params["layers"], cache))
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["unembed"])
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# hybrid (RecurrentGemma)
+# ---------------------------------------------------------------------------
+def _hybrid_rec_prefill(cfg, lp, h):
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    y, (conv, hstate) = rglru_block(lp["temporal"], cfg.rglru_cfg(), x)
+    h = h + y
+    ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return h + ff, {"conv": conv, "h": hstate}
+
+
+def _hybrid_attn_prefill(cfg, lp, h, cos, sin):
+    W = cfg.local_window
+    a, kc, vc = _attn_prefill(
+        lp["temporal"], cfg.attn_cfg(window=W),
+        rms_norm(h, lp["ln1"], cfg.norm_eps), cos, sin, W, cfg.attn_kv_chunk,
+    )
+    h = h + a
+    ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return h + ff, {"k": kc, "v": vc}
+
+
+def _hybrid_prefill(cfg: ModelConfig, params, batch, max_len: int):
+    del max_len
+    h = _embed_inputs(cfg, params, batch)
+    S = h.shape[1]
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+
+    def superblock(h, lp):
+        h, st1 = _hybrid_rec_prefill(cfg, lp["rec1"], h)
+        h, st2 = _hybrid_rec_prefill(cfg, lp["rec2"], h)
+        h, sta = _hybrid_attn_prefill(cfg, lp["attn"], h, cos, sin)
+        return h, {"rec1": st1, "rec2": st2, "attn": sta}
+
+    h, cache = jax.lax.scan(superblock, h, params["superblocks"])
+    if "tail" in params:
+
+        def tail_layer(h, lp):
+            return _hybrid_rec_prefill(cfg, lp, h)
+
+        h, tail_cache = jax.lax.scan(tail_layer, h, params["tail"])
+        cache = {"super": cache, "tail": tail_cache}
+    else:
+        cache = {"super": cache}
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    return logits, cache, S
+
+
+def _hybrid_rec_decode(cfg, lp, h, st):
+    x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    y, (conv, hstate) = rglru_block(
+        lp["temporal"], cfg.rglru_cfg(), x, conv_prev=st["conv"], h_prev=st["h"]
+    )
+    h = h + y
+    ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return h + ff, {"conv": conv, "h": hstate}
+
+
+def _hybrid_attn_decode(cfg, lp, h, st, pos, cos, sin):
+    a, kv = decode_attention(
+        lp["temporal"], cfg.attn_cfg(window=cfg.local_window),
+        rms_norm(h, lp["ln1"], cfg.norm_eps), st, pos, rope_cos=cos, rope_sin=sin,
+    )
+    h = h + a
+    ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return h + ff, kv
+
+
+def _hybrid_decode(cfg: ModelConfig, params, cache, pos, token):
+    h = _embed_tokens(cfg, params, token[:, None])
+    cos, sin = _rope_tables(cfg, pos[None])
+
+    def superblock(h, inp):
+        lp, st = inp
+        h, st1 = _hybrid_rec_decode(cfg, lp["rec1"], h, st["rec1"])
+        h, st2 = _hybrid_rec_decode(cfg, lp["rec2"], h, st["rec2"])
+        h, sta = _hybrid_attn_decode(cfg, lp["attn"], h, st["attn"], pos, cos, sin)
+        return h, {"rec1": st1, "rec2": st2, "attn": sta}
+
+    h, new_super = jax.lax.scan(
+        superblock, h, (params["superblocks"], cache["super"])
+    )
+    new_cache = {"super": new_super}
+    if "tail" in params:
+
+        def tail_layer(h, inp):
+            lp, st = inp
+            return _hybrid_rec_decode(cfg, lp, h, st)
+
+        h, new_tail = jax.lax.scan(tail_layer, h, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["unembed"])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# encdec (seamless)
+# ---------------------------------------------------------------------------
+def _encode(cfg: ModelConfig, params, frontend_embeds):
+    enc_h = jnp.einsum(
+        "bpd,de->bpe", frontend_embeds.astype(params["embed"].dtype),
+        params["frontend_proj"],
+    )
+
+    enc_cos, enc_sin = _rope_tables(cfg, jnp.arange(enc_h.shape[1]))
+
+    def enc_layer(h, lp):
+        a = multi_head_attention(
+            lp["attn"], cfg.attn_cfg(causal=False),
+            rms_norm(h, lp["ln1"], cfg.norm_eps),
+            rope_cos=enc_cos, rope_sin=enc_sin, kv_chunk=cfg.attn_kv_chunk,
+        )
+        h = h + a
+        ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                    lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return h + ff, None
+
+    enc_h, _ = jax.lax.scan(enc_layer, enc_h, params["enc_layers"])
+    return rms_norm(enc_h, params["enc_norm"], cfg.norm_eps)
+
+
+def _encdec_prefill(cfg: ModelConfig, params, batch, max_len: int):
+    enc_h = _encode(cfg, params, batch["frontend_embeds"])
+    h = _embed_tokens(cfg, params, batch["tokens"])
+    B, S, _ = h.shape
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+    C = _cache_len(cfg, max_len)
+
+    def dec_layer(h, lp):
+        a, kc, vc = _attn_prefill(
+            lp["self_attn"], cfg.attn_cfg(),
+            rms_norm(h, lp["ln1"], cfg.norm_eps), cos, sin, C, cfg.attn_kv_chunk,
+        )
+        h = h + a
+        # cross-attention + cache the encoder projections
+        xk = jnp.einsum("btd,dhk->bthk", enc_h, lp["cross_attn"]["wk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_h, lp["cross_attn"]["wv"])
+        c = multi_head_attention(
+            lp["cross_attn"], cfg.attn_cfg(causal=False),
+            rms_norm(h, lp["ln2"], cfg.norm_eps),
+            kv_source=enc_h, kv_chunk=cfg.attn_kv_chunk,
+        )
+        h = h + c
+        ff = swiglu(rms_norm(h, lp["ln3"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                    lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return h + ff, {"k": kc, "v": vc, "xk": xk, "xv": xv}
+
+    h, cache = jax.lax.scan(dec_layer, h, params["dec_layers"])
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["unembed"])
+    return logits, cache, S
+
+
+def _encdec_decode(cfg: ModelConfig, params, cache, pos, token):
+    h = _embed_tokens(cfg, params, token[:, None])
+    cos, sin = _rope_tables(cfg, pos[None])
+
+    def dec_layer(h, inp):
+        lp, st = inp
+        a, kv = decode_attention(
+            lp["self_attn"], cfg.attn_cfg(),
+            rms_norm(h, lp["ln1"], cfg.norm_eps),
+            {"k": st["k"], "v": st["v"]}, pos, rope_cos=cos, rope_sin=sin,
+        )
+        h = h + a
+        # cross-attention against the precomputed encoder projections
+        acfg = cfg.attn_cfg(causal=False)
+        q = jnp.einsum("bsd,dhk->bshk", rms_norm(h, lp["ln2"], cfg.norm_eps),
+                       lp["cross_attn"]["wq"])
+        kk = _expand_kv(st["xk"], acfg.n_heads)
+        vv = _expand_kv(st["xv"], acfg.n_heads)
+        logits = jnp.einsum("bshk,bthk->bhst", q, kk) * (acfg.head_dim ** -0.5)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(h.dtype)
+        c = jnp.einsum("bhst,bthk->bshk", probs, vv)
+        h = h + jnp.einsum("bshk,hkd->bsd", c, lp["cross_attn"]["wo"])
+        ff = swiglu(rms_norm(h, lp["ln3"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                    lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return h + ff, {"k": kv["k"], "v": kv["v"], "xk": st["xk"], "xv": st["xv"]}
+
+    h, cache = jax.lax.scan(dec_layer, h, (params["dec_layers"], cache))
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["unembed"])
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+_PREFILL = {
+    "dense": _dense_prefill,
+    "moe": _dense_prefill,
+    "rwkv6": _rwkv_prefill,
+    "hybrid": _hybrid_prefill,
+    "encdec": _encdec_prefill,
+}
+_DECODE = {
+    "dense": _dense_decode,
+    "moe": _dense_decode,
+    "rwkv6": _rwkv_decode,
+    "hybrid": _hybrid_decode,
+    "encdec": _encdec_decode,
+}
+
+
+def prefill(cfg: ModelConfig, params, batch, *, max_len: int):
+    """Process the full prompt; returns (last-token logits, cache, pos)."""
+    return _PREFILL[cfg.family](cfg, params, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, pos, token):
+    """One token for the whole batch; returns (logits [B,Vpad], new cache)."""
+    return _DECODE[cfg.family](cfg, params, cache, pos, token)
+
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 0,
+    dtype=jnp.bfloat16,
+) -> Pytree:
+    """Zero-initialized cache with the right (stacked) structure — used by
+    the dry-run to build ShapeDtypeStructs and by serving to warm-start."""
+    B, Hkv, Dh = batch, cfg.n_kv_heads, cfg.hd
+    C = _cache_len(cfg, max_len)
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": jnp.zeros((L, B, C, Hkv, Dh), dtype),
+            "v": jnp.zeros((L, B, C, Hkv, Dh), dtype),
+        }
+    if cfg.family == "rwkv6":
+        H = cfg.n_heads
+        D = cfg.d_model
+        return {
+            "shift_tm": jnp.zeros((L, B, 1, D), dtype),
+            "wkv": jnp.zeros((L, B, H, D // H, D // H), jnp.float32),
+            "shift_cm": jnp.zeros((L, B, 1, D), dtype),
+        }
+    if cfg.family == "hybrid":
+        n_super, n_tail = divmod(cfg.n_layers, 3)
+        R = cfg.d_rnn or cfg.d_model
+        W = cfg.local_window
+        rec = lambda n: {  # noqa: E731
+            "conv": jnp.zeros((n, B, 3, R), dtype),
+            "h": jnp.zeros((n, B, R), jnp.float32),
+        }
+        cache = {
+            "super": {
+                "rec1": rec(n_super),
+                "rec2": rec(n_super),
+                "attn": {
+                    "k": jnp.zeros((n_super, B, W, Hkv, Dh), dtype),
+                    "v": jnp.zeros((n_super, B, W, Hkv, Dh), dtype),
+                },
+            }
+        }
+        if n_tail:
+            cache["tail"] = rec(n_tail)
+        return cache
+    if cfg.family == "encdec":
+        Ld = cfg.n_dec_layers or cfg.n_layers
+        return {
+            "k": jnp.zeros((Ld, B, C, Hkv, Dh), dtype),
+            "v": jnp.zeros((Ld, B, C, Hkv, Dh), dtype),
+            "xk": jnp.zeros((Ld, B, enc_len, Hkv, Dh), dtype),
+            "xv": jnp.zeros((Ld, B, enc_len, Hkv, Dh), dtype),
+        }
+    raise ValueError(cfg.family)

@@ -1,0 +1,452 @@
+"""The composable LM: one ModelConfig covers all ten assigned architectures.
+
+Families (DESIGN.md §5):
+  dense   — decoder-only transformer, GQA (+ optional SWA window, qk-norm)
+  moe     — dense attention + MoE FFN (mixtral, deepseek-moe)
+  rwkv6   — attention-free time-mix/channel-mix stack
+  hybrid  — RecurrentGemma: (rec, rec, local-attn) superblocks + MLP
+  encdec  — seamless: bidirectional encoder + causal decoder w/ cross-attn
+
+All stacks scan over layers (compile time O(1) in depth), remat inside the
+scan for training, and carry stacked per-layer decode state. The modality
+frontends ([audio]/[vlm]) are stubs by assignment: ``input_specs`` provides
+precomputed frame/patch embeddings that are concatenated ahead of the token
+embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (
+    AttnConfig,
+    attn_param_specs,
+    decode_attention,
+    init_kv_cache,
+    multi_head_attention,
+)
+from repro.models.common import (
+    ParamSpec,
+    cross_entropy_loss,
+    rms_norm,
+    swiglu,
+)
+from repro.models.moe import MoEConfig, moe_ffn, moe_param_specs
+from repro.models.rglru import RGLRUConfig, rglru_block, rglru_param_specs
+from repro.models.rwkv6 import (
+    RWKVConfig,
+    channel_mix,
+    rwkv_param_specs,
+    time_mix,
+)
+from repro.distributed.sharding_ctx import constrain
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | rwkv6 | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    window: Optional[int] = None  # sliding-window attention (mixtral)
+    local_window: Optional[int] = None  # hybrid local attention window
+    moe: Optional[MoEConfig] = None
+    n_dec_layers: Optional[int] = None  # encdec decoder depth
+    frontend: Optional[str] = None  # None | "audio" | "vision" (stub)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    remat: bool = True
+    vocab_pad_to: int = 2048
+    d_rnn: Optional[int] = None  # hybrid recurrent width
+    attn_kv_chunk: int = 1024
+    wkv_chunk: Optional[int] = None  # chunked-WKV block (rwkv6 §Perf lever)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this config decode at 500k context? (constant/windowed state)"""
+        if self.family in ("rwkv6", "hybrid"):
+            return True
+        return self.window is not None
+
+    def attn_cfg(self, *, causal=True, window=None) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.hd,
+            qk_norm=self.qk_norm,
+            window=window if window is not None else self.window,
+            causal=causal,
+            rope_theta=self.rope_theta,
+        )
+
+    def rwkv_cfg(self) -> RWKVConfig:
+        return RWKVConfig(
+            d_model=self.d_model, n_heads=self.n_heads, d_ff=self.d_ff
+        )
+
+    def rglru_cfg(self) -> RGLRUConfig:
+        return RGLRUConfig(d_model=self.d_model, d_rnn=self.d_rnn or self.d_model)
+
+    # ----- parameter count (for 6·N·D roofline bookkeeping) ---------------
+    def param_count(self, params: Pytree) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def _mlp_specs(cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((D, F), ("fsdp", "tp")),
+        "w_up": ParamSpec((D, F), ("fsdp", "tp")),
+        "w_down": ParamSpec((F, D), ("tp", "fsdp")),
+    }
+
+
+def _norm(cfg: ModelConfig):
+    return ParamSpec((cfg.d_model,), (None,), init="ones")
+
+
+def _dense_layer_specs(cfg: ModelConfig):
+    return {
+        "attn": attn_param_specs(cfg.attn_cfg()),
+        "mlp": _mlp_specs(cfg),
+        "ln1": _norm(cfg),
+        "ln2": _norm(cfg),
+    }
+
+
+def _moe_layer_specs(cfg: ModelConfig):
+    return {
+        "attn": attn_param_specs(cfg.attn_cfg()),
+        "moe": moe_param_specs(cfg.moe),
+        "ln1": _norm(cfg),
+        "ln2": _norm(cfg),
+    }
+
+
+def _rwkv_layer_specs(cfg: ModelConfig):
+    specs = rwkv_param_specs(cfg.rwkv_cfg())
+    specs["ln1"] = _norm(cfg)
+    specs["ln2"] = _norm(cfg)
+    return specs
+
+
+def _hybrid_superblock_specs(cfg: ModelConfig):
+    """One (rec, rec, local-attn) superblock, each with its own MLP."""
+    local = cfg.attn_cfg(window=cfg.local_window)
+    blk = lambda temporal: {  # noqa: E731
+        "temporal": temporal,
+        "mlp": _mlp_specs(cfg),
+        "ln1": _norm(cfg),
+        "ln2": _norm(cfg),
+    }
+    return {
+        "rec1": blk(rglru_param_specs(cfg.rglru_cfg())),
+        "rec2": blk(rglru_param_specs(cfg.rglru_cfg())),
+        "attn": blk(attn_param_specs(local)),
+    }
+
+
+def _stack(specs: Pytree, n: int) -> Pytree:
+    """Prepend a scanned layer dimension to every ParamSpec."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.logical), s.init, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> Pytree:
+    V, D = cfg.padded_vocab, cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("tp", "fsdp"), init="embed", scale=1.0),
+        "unembed": ParamSpec((D, V), ("fsdp", "tp")),
+        "out_norm": _norm(cfg),
+    }
+    if cfg.family == "dense":
+        specs["layers"] = _stack(_dense_layer_specs(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        specs["layers"] = _stack(_moe_layer_specs(cfg), cfg.n_layers)
+    elif cfg.family == "rwkv6":
+        specs["layers"] = _stack(_rwkv_layer_specs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_super, n_tail = divmod(cfg.n_layers, 3)
+        specs["superblocks"] = _stack(_hybrid_superblock_specs(cfg), n_super)
+        if n_tail:
+            # tail layers are recurrent blocks (Griffin starts each triple
+            # with recurrence; 26 = 8*3 + 2 leaves two rec blocks)
+            tail_blk = _hybrid_superblock_specs(cfg)["rec1"]
+            specs["tail"] = _stack(tail_blk, n_tail)
+    elif cfg.family == "encdec":
+        enc_layer = {
+            "attn": attn_param_specs(cfg.attn_cfg(causal=False)),
+            "mlp": _mlp_specs(cfg),
+            "ln1": _norm(cfg),
+            "ln2": _norm(cfg),
+        }
+        dec_layer = {
+            "self_attn": attn_param_specs(cfg.attn_cfg()),
+            "cross_attn": attn_param_specs(cfg.attn_cfg(causal=False)),
+            "mlp": _mlp_specs(cfg),
+            "ln1": _norm(cfg),
+            "ln2": _norm(cfg),
+            "ln3": _norm(cfg),
+        }
+        specs["enc_layers"] = _stack(enc_layer, cfg.n_layers)
+        specs["dec_layers"] = _stack(dec_layer, cfg.n_dec_layers or cfg.n_layers)
+        specs["enc_norm"] = _norm(cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    if cfg.frontend:
+        # stub projection for precomputed frame/patch embeddings
+        specs["frontend_proj"] = ParamSpec((D, D), ("fsdp", "tp"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes (training / prefill)
+# ---------------------------------------------------------------------------
+def _rope_tables(cfg: ModelConfig, positions: jax.Array):
+    half = cfg.hd // 2
+    inv = 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    freqs = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def _dense_block(cfg: ModelConfig, params, h, cos, sin, is_moe: bool):
+    a = multi_head_attention(
+        params["attn"],
+        cfg.attn_cfg(),
+        rms_norm(h, params["ln1"], cfg.norm_eps),
+        rope_cos=cos,
+        rope_sin=sin,
+        kv_chunk=cfg.attn_kv_chunk,
+    )
+    h = h + a
+    ff_in = rms_norm(h, params["ln2"], cfg.norm_eps)
+    if is_moe:
+        ff, aux = moe_ffn(params["moe"], cfg.moe, ff_in)
+    else:
+        ff = swiglu(ff_in, params["mlp"]["w_gate"], params["mlp"]["w_up"],
+                    params["mlp"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return h + ff, aux
+
+
+def _rwkv_block(cfg: ModelConfig, params, h):
+    y, _ = time_mix(
+        params["time_mix"], cfg.rwkv_cfg(),
+        rms_norm(h, params["ln1"], cfg.norm_eps), chunk=cfg.wkv_chunk,
+    )
+    h = h + y
+    y, _ = channel_mix(
+        params["channel_mix"], cfg.rwkv_cfg(), rms_norm(h, params["ln2"], cfg.norm_eps)
+    )
+    return h + y
+
+
+def _hybrid_block(cfg: ModelConfig, params, h, cos, sin, kind: str):
+    x = rms_norm(h, params["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        y, _ = rglru_block(params["temporal"], cfg.rglru_cfg(), x)
+    else:
+        y = multi_head_attention(
+            params["temporal"],
+            cfg.attn_cfg(window=cfg.local_window),
+            x,
+            rope_cos=cos,
+            rope_sin=sin,
+            kv_chunk=cfg.attn_kv_chunk,
+        )
+    h = h + y
+    ff_in = rms_norm(h, params["ln2"], cfg.norm_eps)
+    ff = swiglu(ff_in, params["mlp"]["w_gate"], params["mlp"]["w_up"],
+                params["mlp"]["w_down"])
+    return h + ff
+
+
+def _maybe_remat(f, cfg: ModelConfig, train: bool):
+    if train and cfg.remat:
+        def barriered(h, lp):
+            # Pin the carry slice to the loop iteration: without this
+            # barrier XLA rewrites slice(convert(saved_stack)) as
+            # convert(slice(...)) and hoists the bf16->f32 convert of the
+            # WHOLE saved residual stack out of the backward loop,
+            # materializing an [L, B, S, D] f32 copy of every layer input
+            # at once (2x the remat budget). The barrier must sit INSIDE
+            # the rematted region so the recompute path starts from it —
+            # found via the §Perf granite/mistral train iterations.
+            h = jax.lax.optimization_barrier(h)
+            return f(h, lp)
+
+        return jax.checkpoint(
+            barriered, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    return f
+
+
+def _embed_tokens(cfg, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    """Token embeddings, with frontend embeddings prepended when present."""
+    h = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = jnp.einsum(
+            "bpd,de->bpe", batch["frontend_embeds"].astype(h.dtype),
+            params["frontend_proj"],
+        )
+        h = jnp.concatenate([fe, h], axis=1)
+    return constrain(h, "residual")
+
+
+def forward(cfg: ModelConfig, params, batch, *, train: bool) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B,S,Vpad], aux_loss)."""
+    if cfg.family == "encdec":
+        return _forward_encdec(cfg, params, batch, train=train)
+    h = _embed_inputs(cfg, params, batch)
+    S = h.shape[1]
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def layer(h, lp):
+            h2, aux = _dense_block(cfg, lp, h, cos, sin, is_moe)
+            return constrain(h2, "residual"), aux
+
+        h, auxes = jax.lax.scan(_maybe_remat(layer, cfg, train), h, params["layers"])
+        aux_total = auxes.sum()
+    elif cfg.family == "rwkv6":
+
+        def layer(h, lp):
+            return constrain(_rwkv_block(cfg, lp, h), "residual"), jnp.zeros((), jnp.float32)
+
+        h, _ = jax.lax.scan(_maybe_remat(layer, cfg, train), h, params["layers"])
+    elif cfg.family == "hybrid":
+
+        def superblock(h, lp):
+            h = _hybrid_block(cfg, lp["rec1"], h, cos, sin, "rec")
+            h = _hybrid_block(cfg, lp["rec2"], h, cos, sin, "rec")
+            h = _hybrid_block(cfg, lp["attn"], h, cos, sin, "attn")
+            return constrain(h, "residual"), jnp.zeros((), jnp.float32)
+
+        h, _ = jax.lax.scan(
+            _maybe_remat(superblock, cfg, train), h, params["superblocks"]
+        )
+        if "tail" in params:
+
+            def tail_layer(h, lp):
+                return constrain(_hybrid_block(cfg, lp, h, cos, sin, "rec"),
+                                 "residual"), None
+
+            h, _ = jax.lax.scan(_maybe_remat(tail_layer, cfg, train), h, params["tail"])
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = constrain(
+        jnp.einsum("bsd,dv->bsv", h, params["unembed"]), "logits"
+    )
+    return logits, aux_total
+
+
+def _forward_encdec(cfg: ModelConfig, params, batch, *, train: bool):
+    # encoder over frontend embeddings (audio frames — stub provides them)
+    enc_h = jnp.einsum(
+        "bpd,de->bpe",
+        batch["frontend_embeds"].astype(params["embed"].dtype),
+        params["frontend_proj"],
+    )
+
+    enc_cos, enc_sin = _rope_tables(cfg, jnp.arange(enc_h.shape[1]))
+
+    def enc_layer(h, lp):
+        a = multi_head_attention(
+            lp["attn"], cfg.attn_cfg(causal=False),
+            rms_norm(h, lp["ln1"], cfg.norm_eps),
+            rope_cos=enc_cos, rope_sin=enc_sin, kv_chunk=cfg.attn_kv_chunk,
+        )
+        h = h + a
+        ff = swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                    lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return constrain(h + ff, "residual"), None
+
+    enc_h, _ = jax.lax.scan(
+        _maybe_remat(enc_layer, cfg, train), enc_h, params["enc_layers"]
+    )
+    enc_h = rms_norm(enc_h, params["enc_norm"], cfg.norm_eps)
+
+    h = _embed_tokens(cfg, params, batch["tokens"])
+    S = h.shape[1]
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+
+    def dec_layer(h, lp):
+        a = multi_head_attention(
+            lp["self_attn"], cfg.attn_cfg(),
+            rms_norm(h, lp["ln1"], cfg.norm_eps),
+            rope_cos=cos, rope_sin=sin, kv_chunk=cfg.attn_kv_chunk,
+        )
+        h = h + a
+        c = multi_head_attention(
+            lp["cross_attn"], cfg.attn_cfg(causal=False),
+            rms_norm(h, lp["ln2"], cfg.norm_eps),
+            kv_source=enc_h, kv_chunk=cfg.attn_kv_chunk,
+        )
+        h = h + c
+        ff = swiglu(rms_norm(h, lp["ln3"], cfg.norm_eps), lp["mlp"]["w_gate"],
+                    lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return constrain(h + ff, "residual"), None
+
+    h, _ = jax.lax.scan(
+        _maybe_remat(dec_layer, cfg, train), h, params["dec_layers"]
+    )
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = constrain(
+        jnp.einsum("bsd,dv->bsv", h, params["unembed"]), "logits"
+    )
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, train: bool = True):
+    logits, aux = forward(cfg, params, batch, train=train)
+    labels = batch["labels"]
+    # frontend positions carry no labels — only score the token tail
+    S_lab = labels.shape[1]
+    logits = logits[:, -S_lab:]
+    # mask out vocab padding columns
+    V = cfg.vocab_size
+    if cfg.padded_vocab != V:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= V
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    ce = cross_entropy_loss(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing with
+GShard-style grouped capacity dispatch (the TPU-native MoE: dispatch and
+combine are einsums that shard cleanly and turn into all-to-alls under SPMD).
+
+Tokens are grouped by sequence (group g = one sequence), each group has a
+local expert capacity C = ceil(cap_factor * S * k / E); overflowing
+assignments are dropped (standard Switch/GShard behaviour). The dispatch
+tensor is [G, S, E, C] in bf16, sharded over batch (g) and experts (e), so
+its per-device footprint stays modest; with remat it is transient.
+
+Expert sharding modes (config ``moe_shard``):
+  * "ep" — experts sharded over the 'tp' mesh axis (deepseek-moe: 64 experts
+    over 16 devices). Dispatch/combine einsums become all-to-alls.
+  * "tp" — every expert's hidden dim sharded over 'tp' (mixtral: 8 experts
+    cannot split over 16 devices; shard F=14336 instead).
+
+Covers both assigned MoE archs:
+  * mixtral-8x7b       — 8 experts, top-2, no shared experts, mode "tp"
+  * deepseek-moe-16b   — 64 routed top-6 + 2 shared experts, mode "ep"
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int  # FFN hidden dim of each routed expert
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-on shared experts (deepseek)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    shard_mode: str = "ep"  # "ep" | "tp"
+
+
+def moe_param_specs(cfg: MoEConfig):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_expert
+    if cfg.shard_mode == "ep":
+        e_axes = ("tp", "fsdp", None)
+        e_axes_out = ("tp", None, "fsdp")
+    else:  # tp-inside-expert
+        e_axes = (None, "fsdp", "tp")
+        e_axes_out = (None, "tp", "fsdp")
+    specs = {
+        "router": ParamSpec((D, E), ("fsdp", None), scale=0.1),
+        "w_gate": ParamSpec((E, D, F), e_axes),
+        "w_up": ParamSpec((E, D, F), e_axes),
+        "w_down": ParamSpec((E, F, D), e_axes_out),
+    }
+    if cfg.n_shared:
+        specs["shared_gate"] = ParamSpec((cfg.n_shared, D, F), (None, "fsdp", "tp"))
+        specs["shared_up"] = ParamSpec((cfg.n_shared, D, F), (None, "fsdp", "tp"))
+        specs["shared_down"] = ParamSpec((cfg.n_shared, F, D), (None, "tp", "fsdp"))
+    return specs
+
+
+def moe_ffn(params, cfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [G, S, D] -> (y [G, S, D], aux_loss). Groups are dispatch-local:
+    callers pass [batch, seq, D] for training/prefill and [1, batch, D] for
+    decode."""
+    G, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * S * K / E), 4)
+
+    logits = jnp.einsum("gsd,de->gse", x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [G, S, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # [G, S, K, E]
+    # queue position of each assignment in its expert, choice-major order
+    # (all k=0 choices first — Switch prioritization)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * S, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, K, S, E).transpose(0, 2, 1, 3)
+    in_cap = (pos < C).astype(jnp.float32) * onehot  # [G, S, K, E]
+    slot = jnp.einsum("gske,gske->gsk", pos, onehot).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32)  # [G, S, K, C]
+
+    dispatch = jnp.einsum("gske,gskc->gsec", in_cap, slot_oh).astype(x.dtype)
+    combine = jnp.einsum(
+        "gsk,gske,gskc->gsec", top_p.astype(jnp.float32), in_cap, slot_oh
+    ).astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)  # [E, G, C, D]
+    he = _swiglu_experts(xe.reshape(E, G * C, D), params).reshape(E, G, C, D)
+    y = jnp.einsum("gsec,egcd->gsd", combine, he)
+
+    if cfg.n_shared:
+        for i in range(cfg.n_shared):
+            y = y + swiglu(
+                x,
+                params["shared_gate"][i],
+                params["shared_up"][i],
+                params["shared_down"][i],
+            )
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    f_e = jnp.mean(onehot[..., 0, :], axis=(0, 1))  # top-1 routing fraction
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(f_e * p_e)
+    return y, aux.astype(jnp.float32)
+
+
+def _swiglu_experts(xe: jax.Array, params) -> jax.Array:
+    """Per-expert SwiGLU: xe [E, T, D] with stacked weights [E, D, F]."""
+    g = jax.nn.silu(jnp.einsum("etd,edf->etf", xe, params["w_gate"]))
+    u = jnp.einsum("etd,edf->etf", xe, params["w_up"])
+    return jnp.einsum("etf,efd->etd", g * u, params["w_down"])

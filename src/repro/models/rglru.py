@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    a_t = a^(c * r_t)      a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in Griffin's recurrent block: two linear branches (width d_rnn),
+one gated by GeLU, the other passed through a short conv1d (width 4) and the
+RG-LRU; merged multiplicatively and projected out. Diagonal recurrence =>
+O(S) time scan and O(d_rnn) state — the ``long_500k`` cell runs on this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+_C = 8.0
+_LOG_A_INIT = -8.0  # softplus-param of Lambda; a ~ sigmoid(8) ~ 0.9997
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int  # recurrent width (RecurrentGemma: lru_width = d_model)
+    conv_width: int = 4
+
+
+def rglru_param_specs(cfg: RGLRUConfig):
+    D, R = cfg.d_model, cfg.d_rnn
+    return {
+        "w_in_gate": ParamSpec((D, R), ("fsdp", "tp")),
+        "w_in_rnn": ParamSpec((D, R), ("fsdp", "tp")),
+        "conv_w": ParamSpec((cfg.conv_width, R), (None, "tp"), scale=0.5),
+        "conv_b": ParamSpec((R,), ("tp",), init="zeros"),
+        "gate_a": ParamSpec((R, R), ("tp", None), scale=0.5),
+        "gate_x": ParamSpec((R, R), ("tp", None), scale=0.5),
+        "lambda_p": ParamSpec((R,), ("tp",), init="ones", scale=1.0),
+        "w_out": ParamSpec((R, D), ("tp", "fsdp")),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array | None):
+    """Causal depthwise conv, width K. x [B,S,R]; prev [B,K-1,R] carries
+    decode state."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # [B, S+K-1, R]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out + b, xp[:, -(K - 1) :]
+
+
+def rglru_block(params, cfg: RGLRUConfig, x, *, conv_prev=None, h_prev=None):
+    """x: [B, S, D] -> (y, (conv_state, h_state))."""
+    B, S, _ = x.shape
+    gate_branch = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, params["w_in_gate"]))
+    rnn_in = jnp.einsum("bsd,dr->bsr", x, params["w_in_rnn"])
+    rnn_in, conv_state = _conv1d(rnn_in, params["conv_w"], params["conv_b"], conv_prev)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", rnn_in, params["gate_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", rnn_in, params["gate_x"]))
+    log_a = -_C * r * jax.nn.softplus(_LOG_A_INIT * params["lambda_p"]).astype(
+        r.dtype
+    )
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (i * rnn_in).astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    if h_prev is None:
+        h_prev = jnp.zeros((B, cfg.d_rnn), jnp.float32)
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0)  # noqa: E731
+    h_last, hs = jax.lax.scan(step, h_prev, (seq_first(a), seq_first(mult * gated)))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [B, S, R]
+    y = jnp.einsum("bsr,rd->bsd", hs * gate_branch, params["w_out"])
+    return y, (conv_state, h_last)

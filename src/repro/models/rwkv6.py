@@ -1,0 +1,202 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay
+[arXiv:2404.05892], plus the squared-ReLU channel-mix.
+
+Per head (head_dim Dh), the wkv recurrence over time t:
+
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          (state: [Dh, Dh])
+    o_t   = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+with r, k, v, g projections of token-shift mixes of x, and the decay
+w_t = exp(-exp(dd_t)) *data-dependent* via a low-rank MLP on the shifted
+input (the Finch novelty vs RWKV5's static decay). Output gated by silu(g)
+and group-normed per head.
+
+Training uses a time scan (linear in S — this is what makes the 500k-token
+cell feasible, DESIGN.md §5); decode carries (shift, S) state per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_heads: int  # head_dim = d_model // n_heads
+    d_ff: int
+    decay_lora: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rwkv_param_specs(cfg: RWKVConfig):
+    D, F, R = cfg.d_model, cfg.d_ff, cfg.decay_lora
+    return {
+        "time_mix": {
+            # token-shift interpolation factors for r/k/v/g/w
+            "mu": ParamSpec((5, D), (None, "fsdp"), init="ones", scale=0.5),
+            "wr": ParamSpec((D, D), ("fsdp", "tp")),
+            "wk": ParamSpec((D, D), ("fsdp", "tp")),
+            "wv": ParamSpec((D, D), ("fsdp", "tp")),
+            "wg": ParamSpec((D, D), ("fsdp", "tp")),
+            "wo": ParamSpec((D, D), ("tp", "fsdp")),
+            # data-dependent decay: low-rank MLP
+            "decay_a": ParamSpec((D, R), ("fsdp", None), scale=0.1),
+            "decay_b": ParamSpec((R, D), (None, "tp"), scale=0.1),
+            "decay_bias": ParamSpec((D,), ("tp",), init="zeros"),
+            "bonus_u": ParamSpec((D,), ("tp",), init="zeros"),
+            "ln_g": ParamSpec((D,), (None,), init="ones"),
+        },
+        "channel_mix": {
+            "mu": ParamSpec((2, D), (None, "fsdp"), init="ones", scale=0.5),
+            "wk": ParamSpec((D, F), ("fsdp", "tp")),
+            "wv": ParamSpec((F, D), ("tp", "fsdp")),
+            "wr": ParamSpec((D, D), ("fsdp", "tp")),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None):
+    """Shift sequence right by one; ``prev`` [B, 1, D] seeds decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(params, cfg: RWKVConfig, x, *, shift_prev=None, state=None,
+             chunk: int | None = None):
+    """x: [B, S, D]. Returns (y, (last_x, new_state)).
+    state: [B, H, Dh, Dh] wkv state (decode carries it; training starts 0).
+
+    ``chunk``: block size of the chunked-WKV path (None = the per-token
+    scan). Chunking is the §Perf lever for the rwkv train/prefill cells:
+    the recurrence's state traffic drops by the chunk factor and the
+    per-chunk contractions are MXU matmuls instead of VPU outer products.
+    Both paths are numerically cross-checked in tests/test_rwkv_chunked.py."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    xs = _token_shift(x, shift_prev)
+    mu = params["mu"]
+
+    def mix(i):
+        return x + (xs - x) * mu[i][None, None, :]
+
+    r = jnp.einsum("bsd,de->bse", mix(0), params["wr"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", mix(1), params["wk"]).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", mix(2), params["wv"]).reshape(B, S, H, Dh)
+    g = jnp.einsum("bsd,de->bse", mix(3), params["wg"])
+    dd = (
+        jnp.einsum("bsd,dr,re->bse", mix(4), params["decay_a"], params["decay_b"])
+        + params["decay_bias"]
+    )
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(B, S, H, Dh)
+    u = params["bonus_u"].reshape(H, Dh)
+
+    if state is None:
+        state = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    log_w = -jnp.exp(dd.astype(jnp.float32)).reshape(B, S, H, Dh)
+    if chunk and S % chunk == 0 and S > 1:
+        state, o = _wkv_chunked(r, k, v, log_w, u, state, chunk)
+    else:
+        state, o = _wkv_sequential(r, k, v, w, u, state)
+    o = o.reshape(B, S, D).astype(x.dtype)
+    o = rms_norm(o, params["ln_g"])  # group-norm stand-in (per-channel)
+    y = jnp.einsum("bsd,de->bse", o * jax.nn.silu(g), params["wo"])
+    return y, (x[:, -1:], state)
+
+
+def _wkv_sequential(r, k, v, w, u, state):
+    """Per-token scan (paper-faithful dataflow). Shapes [B,S,H,Dh]."""
+
+    def step(S_prev, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,Dh] each
+        kv = jnp.einsum(
+            "bhk,bhv->bhkv", k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+        )
+        o = jnp.einsum(
+            "bhk,bhkv->bhv", r_t.astype(jnp.float32),
+            S_prev + u[None, :, :, None] * kv,
+        )
+        S_new = w_t.astype(jnp.float32)[..., None] * S_prev + kv
+        return S_new, o
+
+    seq_first = lambda a: jnp.moveaxis(a, 1, 0)  # noqa: E731
+    state, o = jax.lax.scan(
+        step, state, (seq_first(r), seq_first(k), seq_first(v), seq_first(w))
+    )
+    return state, jnp.moveaxis(o, 0, 1)
+
+
+def _wkv_chunked(r, k, v, log_w, u, state, chunk: int):
+    """Chunked WKV — mathematically identical to the scan:
+
+      o_t = (r_t * exp(A_{t-1})) @ S_0
+          + sum_{i<t} (r_t . (k_i * exp(A_{t-1} - A_i))) v_i
+          + (r_t * u) . k_t * v_t                       (bonus diagonal)
+      S_C = exp(A_C) * S_0 + sum_i (k_i * exp(A_C - A_i)) v_i^T
+
+    with A = within-chunk cumulative log-decay (<= 0, per key channel).
+    All exponents used are differences A_x - A_i with x >= i, hence <= 0 —
+    computed EXACTLY via an explicit per-channel pairwise decay tensor
+    [C, C, Dh] (a separable exp(A)·exp(-A) matmul factorization was tried
+    first and refuted: clamping exp(-A_i) flushes non-negligible
+    nearby-step contributions in strong-decay channels — see the §Perf
+    iteration log). State traffic drops by the chunk factor; the state/
+    inter-chunk terms are true matmuls.
+    """
+    B, S, H, Dh = r.shape
+    n_chunks = S // chunk
+    cf = lambda a: a.astype(jnp.float32).reshape(  # noqa: E731
+        B, n_chunks, chunk, H, Dh
+    ).transpose(1, 0, 2, 3, 4)  # [N, B, C, H, Dh]
+    rc, kc, vc, lw = cf(r), cf(k), cf(v), cf(log_w)
+    # strict causal mask over (t, i)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool), k=-1)
+
+    def chunk_step(S0, inp):
+        rb, kb, vb, lwb = inp  # [B, C, H, Dh]
+        A = jnp.cumsum(lwb, axis=1)  # inclusive
+        A_prev = A - lwb  # exclusive
+        # pairwise per-channel decay exp(A_{t-1} - A_i), i < t  (exact)
+        diff = A_prev[:, :, None] - A[:, None]  # [B, t, i, H, Dh]
+        factor = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthd,bihd,btihd->bhti", rb, kb, factor)
+        diag = jnp.einsum("bthd,bthd->bth", rb, kb * u[None, None])
+        o = (
+            jnp.einsum("bhti,bihd->bthd", scores, vb)
+            + diag[..., None] * vb
+            + jnp.einsum("bthd,bhdv->bthv", rb * jnp.exp(A_prev), S0)
+        )
+        A_C = A[:, -1:]  # [B,1,H,Dh]
+        k_tail = kb * jnp.exp(A_C - A)  # exponents <= 0: safe
+        S_new = (
+            jnp.exp(A_C[:, 0])[..., None] * S0
+            + jnp.einsum("bihd,bihv->bhdv", k_tail, vb)
+        )
+        return S_new, o
+
+    state, o = jax.lax.scan(chunk_step, state, (rc, kc, vc, lw))
+    # [N, B, C, H, Dh] -> [B, S, H, Dh]
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+    return state, o
+
+
+def channel_mix(params, cfg: RWKVConfig, x, *, shift_prev=None):
+    xs = _token_shift(x, shift_prev)
+    mu = params["mu"]
+    xk = x + (xs - x) * mu[0][None, None, :]
+    xr = x + (xs - x) * mu[1][None, None, :]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"]))
+    return rr * vv, x[:, -1:]

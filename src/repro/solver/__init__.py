@@ -1,0 +1,21 @@
+"""SpTRSV executors (the 'executor' half of the inspector–executor split).
+
+  * ``reference``   — serial numpy forward/backward substitution (oracle)
+  * ``executor``    — jnp scan over an ExecPlan (single-chip view)
+  * ``distributed`` — shard_map executor: cores = mesh devices, barrier =
+                      all-gather (the BSP model on ICI)
+  * ``cg``          — (preconditioned) conjugate gradient driver
+"""
+from repro.solver.reference import forward_substitution, solve_lower_scipy
+from repro.solver.executor import plan_arrays, solve_with_plan, make_solver
+from repro.solver.cg import cg_solve, pcg_ichol
+
+__all__ = [
+    "forward_substitution",
+    "solve_lower_scipy",
+    "plan_arrays",
+    "solve_with_plan",
+    "make_solver",
+    "cg_solve",
+    "pcg_ichol",
+]

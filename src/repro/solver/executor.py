@@ -1,0 +1,91 @@
+"""Single-chip JAX executor: a `lax.scan` over the ExecPlan.
+
+Each scan step processes one lock-step row per core (k rows in parallel on
+the VPU): gather x at the row's column indices, fused multiply-accumulate,
+divide by the diagonal, scatter into x. Same-core sequential chains flow
+through the scan carry; superstep barriers are free on one chip (DESIGN.md
+§3), so the scan ignores `step_bounds` — they matter for the distributed
+executor and the Pallas kernel grid.
+
+Padding protocol (see core.plan): row id n = scratch row, gather index n =
+scratch slot, so padded lanes are harmless. `accum` rows carry partial sums
+for rows wider than W.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import ExecPlan
+
+
+class PlanArrays(NamedTuple):
+    """Device-resident plan tensors (see ExecPlan for shapes)."""
+
+    row_ids: jax.Array  # int32[T, k]
+    col_idx: jax.Array  # int32[T, k, W]
+    vals: jax.Array  # f[T, k, W]
+    diag: jax.Array  # f[T, k]
+    accum: jax.Array  # bool[T, k]
+    n: int
+    step_bounds: np.ndarray  # host-side; used by distributed executor
+
+
+def plan_arrays(plan: ExecPlan, dtype=jnp.float32) -> PlanArrays:
+    return PlanArrays(
+        row_ids=jnp.asarray(plan.row_ids, dtype=jnp.int32),
+        col_idx=jnp.asarray(plan.col_idx, dtype=jnp.int32),
+        vals=jnp.asarray(plan.vals, dtype=dtype),
+        diag=jnp.asarray(plan.diag, dtype=dtype),
+        accum=jnp.asarray(plan.accum),
+        n=plan.n,
+        step_bounds=np.asarray(plan.step_bounds),
+    )
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _solve_scan(row_ids, col_idx, vals, diag, accum, b_pad, n):
+    x0 = jnp.zeros(n + 1, dtype=b_pad.dtype)
+    acc0 = jnp.zeros(row_ids.shape[1], dtype=b_pad.dtype)
+
+    def step(carry, inp):
+        x, acc = carry
+        rows, cols, v, d, a = inp
+        partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
+        acc = acc + partial_sum
+        xv = (b_pad[rows] - acc) / d
+        # finishing lanes write x and reset their accumulator
+        write = jnp.where(a, x[rows], xv)
+        # NOTE: padded lanes share the scratch row id n -> indices are not
+        # unique; plain scatter keeps them well-defined (they all write junk
+        # to the scratch slot).
+        x = x.at[rows].set(write)
+        acc = jnp.where(a, acc, 0.0)
+        return (x, acc), None
+
+    (x, _), _ = jax.lax.scan(
+        step, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
+    )
+    return x[:n]
+
+
+def solve_with_plan(pa: PlanArrays, b: jax.Array) -> jax.Array:
+    """Solve L x = b using the compiled plan. ``b``: f[n]."""
+    b_pad = jnp.concatenate([b.astype(pa.vals.dtype), jnp.zeros(1, pa.vals.dtype)])
+    return _solve_scan(
+        pa.row_ids, pa.col_idx, pa.vals, pa.diag, pa.accum, b_pad, pa.n
+    )
+
+
+def make_solver(plan: ExecPlan, dtype=jnp.float32):
+    """Bind a plan; returns ``solve(b) -> x`` (jit-compiled on first call)."""
+    pa = plan_arrays(plan, dtype=dtype)
+
+    def solve(b):
+        return solve_with_plan(pa, jnp.asarray(b, dtype=dtype))
+
+    return solve

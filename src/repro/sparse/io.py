@@ -1,0 +1,51 @@
+"""Matrix-Market IO (coordinate real general/symmetric), dependency-light.
+
+Lets users drop in actual SuiteSparse ``.mtx`` files when they have them;
+the offline container uses the generators instead.
+"""
+from __future__ import annotations
+
+import gzip
+import io
+from pathlib import Path
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix, csr_from_coo
+
+
+def read_matrix_market(path: str | Path) -> CSRMatrix:
+    path = Path(path)
+    opener = gzip.open if path.suffix == ".gz" else open
+    with opener(path, "rt") as fh:
+        header = fh.readline().strip().lower()
+        if not header.startswith("%%matrixmarket matrix coordinate"):
+            raise ValueError(f"unsupported MatrixMarket header: {header}")
+        symmetric = "symmetric" in header
+        pattern = "pattern" in header
+        line = fh.readline()
+        while line.startswith("%"):
+            line = fh.readline()
+        n_rows, n_cols, nnz = (int(t) for t in line.split())
+        data = np.loadtxt(io.StringIO(fh.read()), ndmin=2)
+    rows = data[:, 0].astype(np.int64) - 1
+    cols = data[:, 1].astype(np.int64) - 1
+    vals = np.ones(len(rows)) if pattern else data[:, 2].astype(np.float64)
+    if symmetric:
+        off = rows != cols
+        rows = np.concatenate([rows, cols[off]])
+        cols_all = np.concatenate([cols, data[:, 0].astype(np.int64)[off] - 1])
+        vals = np.concatenate([vals, vals[off]])
+        cols = cols_all
+    assert len(rows) >= nnz  # symmetric expansion can only grow
+    return csr_from_coo(n_rows, n_cols, rows, cols, vals)
+
+
+def write_matrix_market(path: str | Path, m: CSRMatrix) -> None:
+    path = Path(path)
+    rows = m.row_of_entry()
+    with open(path, "wt") as fh:
+        fh.write("%%MatrixMarket matrix coordinate real general\n")
+        fh.write(f"{m.n_rows} {m.n_cols} {m.nnz}\n")
+        for r, c, v in zip(rows, m.indices, m.data):
+            fh.write(f"{r + 1} {c + 1} {v:.17g}\n")

@@ -1,0 +1,11 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_loop import TrainState, make_train_step, train_state_specs
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "make_train_step",
+    "train_state_specs",
+]

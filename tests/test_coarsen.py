@@ -1,0 +1,81 @@
+"""Coarsening tests: Prop. 4.3 (cascades preserve acyclicity), funnel
+properties, transitive sparsification correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    check_validity,
+    coarsen_dag,
+    funnel_partition,
+    grow_local,
+    is_cascade,
+    pull_back_schedule,
+    transitive_sparsify,
+)
+from repro.sparse import dag_from_lower_csr, erdos_renyi_lower
+from repro.sparse.dag import topological_levels
+
+
+def test_funnel_parts_are_cascades(any_dag):
+    part = funnel_partition(any_dag, max_size=16)
+    n_parts = int(part.max()) + 1
+    rng = np.random.default_rng(0)
+    # checking every part is slow; sample
+    sample = rng.choice(n_parts, size=min(40, n_parts), replace=False)
+    for c in sample:
+        members = np.nonzero(part == c)[0]
+        assert is_cascade(any_dag, members), f"part {c} is not a cascade"
+
+
+def test_coarse_graph_acyclic(any_dag):
+    part = funnel_partition(any_dag, max_size=32)
+    c = coarsen_dag(any_dag, part)
+    # topological_levels raises on cycles
+    topological_levels(c.coarse)
+    # weights preserved
+    assert c.coarse.weights.sum() == any_dag.weights.sum()
+
+
+def test_pull_back_schedule_validity(any_dag):
+    part = funnel_partition(any_dag, max_size=32)
+    c = coarsen_dag(any_dag, part)
+    cs = grow_local(c.coarse, 8)
+    fine = pull_back_schedule(c, cs, any_dag.n)
+    check_validity(any_dag, fine)
+
+
+def test_transitive_sparsify_keeps_levels(any_dag):
+    red = transitive_sparsify(any_dag)
+    assert red.n_edges <= any_dag.n_edges
+    # levels (longest paths) are invariant under transitive reduction
+    assert np.array_equal(topological_levels(red), topological_levels(any_dag))
+
+
+def test_schedule_on_sparsified_valid_on_original(any_dag):
+    """The formal argument of core.spmp_like: a valid schedule of the reduced
+    DAG is valid for the original."""
+    red = transitive_sparsify(any_dag)
+    s = grow_local(red, 8)
+    check_validity(red, s)
+    check_validity(any_dag, s)  # the stronger claim
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 80),
+    density=st.floats(0.01, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+    max_size=st.integers(2, 40),
+)
+def test_funnel_coarsening_acyclic_property(n, density, seed, max_size):
+    """Property (Prop. 4.3): funnel partitions always yield acyclic quotients,
+    and the pulled-back GrowLocal schedule is valid on the fine DAG."""
+    m = erdos_renyi_lower(n, density, seed=seed)
+    dag = dag_from_lower_csr(m)
+    part = funnel_partition(dag, max_size=max_size)
+    c = coarsen_dag(dag, part)
+    topological_levels(c.coarse)  # must not raise
+    cs = grow_local(c.coarse, 4)
+    fine = pull_back_schedule(c, cs, dag.n)
+    check_validity(dag, fine)

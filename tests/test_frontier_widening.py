@@ -1,0 +1,44 @@
+"""Beyond-paper frontier-widening option (EXPERIMENTS.md §Perf, scheduler
+iterations): off by default (paper-faithful), opt-in must stay valid and
+must improve the single-source-grid regime."""
+import numpy as np
+
+from repro.core import bsp_cost, check_validity, schedule_stats
+from repro.core.growlocal import grow_local
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    ichol0,
+    narrow_band_lower,
+    poisson2d_matrix,
+)
+
+
+def test_widening_valid_everywhere():
+    for L in (
+        ichol0(poisson2d_matrix(40)),
+        erdos_renyi_lower(1500, 1e-3, seed=3),
+        narrow_band_lower(1500, 0.14, 10, seed=4),
+    ):
+        dag = dag_from_lower_csr(L)
+        s = grow_local(dag, 8, frontier_widening=True)
+        check_validity(dag, s)
+
+
+def test_widening_breaks_serial_takeover():
+    """Single-source IC0 grid at paper-filter scale: faithful GrowLocal
+    emits one serial superstep; widening unlocks the wavefront parallelism."""
+    dag = dag_from_lower_csr(ichol0(poisson2d_matrix(120)))
+    base = grow_local(dag, 8)
+    widened = grow_local(dag, 8, frontier_widening=True)
+    assert base.n_supersteps == 1  # the takeover regime
+    assert widened.n_supersteps > 1
+    assert bsp_cost(dag, widened) < bsp_cost(dag, base)
+
+
+def test_widening_near_noop_on_wide_dags():
+    """Many-source DAGs: the rule must not fire destructively (<5% cost)."""
+    dag = dag_from_lower_csr(erdos_renyi_lower(4000, 6e-4, seed=5))
+    base = grow_local(dag, 8)
+    widened = grow_local(dag, 8, frontier_widening=True)
+    assert bsp_cost(dag, widened) <= 1.05 * bsp_cost(dag, base)

@@ -1,0 +1,69 @@
+"""Chunked WKV == sequential WKV (the §Perf optimization must be exact)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.launch.inputs import make_train_batch
+from repro.models import init_params, loss_fn, param_specs
+from repro.models.rwkv6 import _wkv_chunked, _wkv_sequential
+
+
+def _random_wkv_inputs(rng, B, S, H, Dh, decay_scale):
+    r = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    # dd ~ N(0,1)*scale -> w = exp(-exp(dd)); larger scale = harder numerics
+    dd = jnp.asarray(rng.standard_normal((B, S, H, Dh)) * decay_scale,
+                     jnp.float32)
+    log_w = -jnp.exp(dd)
+    w = jnp.exp(log_w)
+    u = jnp.asarray(rng.standard_normal((H, Dh)) * 0.3, jnp.float32)
+    S0 = jnp.asarray(rng.standard_normal((B, H, Dh, Dh)) * 0.1, jnp.float32)
+    return r, k, v, w, log_w, u, S0
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("decay_scale", [0.3, 1.0, 2.0])
+def test_chunked_matches_sequential(chunk, decay_scale):
+    rng = np.random.default_rng(chunk * 100 + int(decay_scale * 10))
+    B, S, H, Dh = 2, 32, 3, 8
+    r, k, v, w, log_w, u, S0 = _random_wkv_inputs(rng, B, S, H, Dh, decay_scale)
+    S_seq, o_seq = _wkv_sequential(r, k, v, w, u, S0)
+    S_chk, o_chk = _wkv_chunked(r, k, v, log_w, u, S0, chunk)
+    np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S_chk), np.asarray(S_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    chunk=st.sampled_from([2, 4, 8]),
+    s_mult=st.integers(1, 4),
+)
+def test_chunked_matches_sequential_property(seed, chunk, s_mult):
+    rng = np.random.default_rng(seed)
+    B, S, H, Dh = 1, chunk * s_mult, 2, 4
+    r, k, v, w, log_w, u, S0 = _random_wkv_inputs(rng, B, S, H, Dh, 0.8)
+    S_seq, o_seq = _wkv_sequential(r, k, v, w, u, S0)
+    S_chk, o_chk = _wkv_chunked(r, k, v, log_w, u, S0, chunk)
+    np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_seq),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(S_chk), np.asarray(S_seq),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_full_model_loss_invariant_under_chunking():
+    cfg = get_reduced("rwkv6_7b")
+    cfg_chunked = dataclasses.replace(cfg, wkv_chunk=8)
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    batch = make_train_batch(cfg, batch=2, seq_len=64, seed=0)
+    l1, _ = loss_fn(cfg, params, batch, train=False)
+    l2, _ = loss_fn(cfg_chunked, params, batch, train=False)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)

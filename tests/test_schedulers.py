@@ -1,0 +1,123 @@
+"""Scheduler unit + property tests: validity (Def. 2.1), barrier reduction,
+block concatenation, reordering, and hypothesis-driven random DAGs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    apply_reordering,
+    block_parallel_schedule,
+    bsp_cost,
+    check_validity,
+    funnel_grow_local,
+    grow_local,
+    hdagg_schedule,
+    schedule_stats,
+    serial_schedule,
+    spmp_like_schedule,
+    wavefront_schedule,
+)
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    longest_path_length,
+    narrow_band_lower,
+)
+from repro.sparse.dag import is_topological_order
+
+SCHEDULERS = {
+    "growlocal": lambda d, k: grow_local(d, k),
+    "funnel_gl": lambda d, k: funnel_grow_local(d, k),
+    "hdagg": lambda d, k: hdagg_schedule(d, k),
+    "spmp_like": lambda d, k: spmp_like_schedule(d, k),
+    "wavefront": lambda d, k: wavefront_schedule(d, k),
+    "serial": lambda d, k: serial_schedule(d),
+}
+
+
+@pytest.mark.parametrize("name", SCHEDULERS)
+def test_schedule_validity(any_dag, name):
+    s = SCHEDULERS[name](any_dag, 8)
+    check_validity(any_dag, s)
+    assert s.n_supersteps >= 1
+
+
+@pytest.mark.parametrize("k", [2, 4, 16])
+def test_growlocal_cores(any_dag, k):
+    s = grow_local(any_dag, k)
+    check_validity(any_dag, s)
+    # every core id in range
+    assert s.pi.max() < k
+
+
+def test_growlocal_beats_wavefront_barriers(nb_matrix):
+    """Paper Table 7.2: big superstep reduction on narrow-band matrices."""
+    dag = dag_from_lower_csr(nb_matrix)
+    gl = grow_local(dag, 8)
+    wf_count = longest_path_length(dag)
+    assert gl.n_supersteps * 5 < wf_count, (
+        f"GrowLocal {gl.n_supersteps} supersteps vs {wf_count} wavefronts"
+    )
+
+
+def test_growlocal_beats_hdagg_cost(nb_matrix):
+    """Paper Table 7.1 (narrow bandw.): GrowLocal BSP cost beats HDagg."""
+    dag = dag_from_lower_csr(nb_matrix)
+    gl = grow_local(dag, 8)
+    hd = hdagg_schedule(dag, 8)
+    assert bsp_cost(dag, gl) < bsp_cost(dag, hd)
+
+
+def test_reordering_topological(any_matrix):
+    dag = dag_from_lower_csr(any_matrix)
+    s = grow_local(dag, 8)
+    L2, s2, _, r = apply_reordering(any_matrix, s)
+    assert is_topological_order(dag, r.perm)
+    assert L2.is_lower_triangular()
+    dag2 = dag_from_lower_csr(L2)
+    check_validity(dag2, s2)
+    # reordering preserves the schedule's shape
+    assert s2.n_supersteps == s.n_supersteps
+    st_ = schedule_stats(dag2, s2)
+    assert st_["n_supersteps"] == s.n_supersteps
+
+
+@pytest.mark.parametrize("n_blocks", [2, 4])
+def test_block_parallel(any_dag, n_blocks):
+    s = block_parallel_schedule(any_dag, 8, n_blocks, lambda d, k: grow_local(d, k))
+    check_validity(any_dag, s)
+    single = grow_local(any_dag, 8)
+    # blocks add barriers (Table 7.7: supersteps grow with threads)
+    assert s.n_supersteps >= single.n_supersteps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 120),
+    density=st.floats(1e-3, 0.2),
+    k=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_growlocal_valid_on_random_dags(n, density, k, seed):
+    """Property: GrowLocal emits a valid schedule on any random lower DAG."""
+    m = erdos_renyi_lower(n, density, seed=seed)
+    dag = dag_from_lower_csr(m)
+    s = grow_local(dag, k)
+    check_validity(dag, s)
+    assert (s.sigma >= 0).all()
+    # all vertices scheduled exactly once
+    assert s.n == dag.n
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 100),
+    band=st.floats(2.0, 20.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_all_schedulers_agree_on_coverage(n, band, seed):
+    m = narrow_band_lower(n, 0.2, band, seed=seed)
+    dag = dag_from_lower_csr(m)
+    for fn in SCHEDULERS.values():
+        s = fn(dag, 4)
+        check_validity(dag, s)
