@@ -14,20 +14,8 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (
-    DEFAULT_L,
-    apply_reordering,
-    bsp_cost,
-    check_validity,
-    compile_plan,
-    funnel_grow_local,
-    grow_local,
-    hdagg_schedule,
-    serial_schedule,
-    spmp_like_schedule,
-    wavefront_schedule,
-)
-from repro.solver import make_solver
+from repro.core import DEFAULT_L, bsp_cost, check_validity, serial_schedule
+from repro.pipeline import TriangularSolver, schedule
 from repro.sparse import (
     dag_from_lower_csr,
     erdos_renyi_lower,
@@ -41,12 +29,19 @@ from repro.sparse.csr import lower_triangle_of
 N_SCALE = 12_000  # paper uses 100k for random sets; scaled for the container
 K_CORES = 8
 
+# display name -> pipeline registry strategy; all benchmark drivers schedule
+# through repro.pipeline so they exercise the same code path as production.
+STRATEGY_OF: Dict[str, str] = {
+    "GrowLocal": "growlocal",
+    "Funnel+GL": "funnel-gl",
+    "SpMP-like": "spmp",
+    "HDagg": "hdagg",
+    "Wavefront": "wavefront",
+}
+
 SCHEDULERS: Dict[str, Callable] = {
-    "GrowLocal": lambda d, k: grow_local(d, k),
-    "Funnel+GL": lambda d, k: funnel_grow_local(d, k),
-    "SpMP-like": lambda d, k: spmp_like_schedule(d, k),
-    "HDagg": lambda d, k: hdagg_schedule(d, k),
-    "Wavefront": lambda d, k: wavefront_schedule(d, k),
+    name: (lambda d, k, _s=strat: schedule(d, k, strategy=_s))
+    for name, strat in STRATEGY_OF.items()
 }
 
 
@@ -97,17 +92,23 @@ def time_callable(fn: Callable[[], object], *, reps: int = 5, warmup: int = 2) -
     return float(np.median(times))
 
 
-def solver_for(L, sched, width=None):
-    L2, s2, _, _ = apply_reordering(L, sched)
-    plan = compile_plan(L2, s2, width=width)
-    solve = make_solver(plan)
+def solver_for(L, sched=None, width=None, *, strategy=None, k=K_CORES,
+               cache=None, backend="scan", **plan_kw):
+    """Bind an executor via the pipeline. Either pass a pre-built ``sched``
+    (schedule-shootout drivers) or a registry ``strategy`` name; extra
+    keywords flow to ``TriangularSolver.plan`` (e.g. ``reorder=False``)."""
+    solver = TriangularSolver.plan(
+        L, strategy=strategy or "growlocal", width=width, backend=backend,
+        k=sched.k if sched is not None else k, cache=cache, sched=sched,
+        **plan_kw,
+    )
     rng = np.random.default_rng(0)
     b = rng.standard_normal(L.n_rows).astype(np.float32)
     import jax.numpy as jnp
 
     bj = jnp.asarray(b)
-    solve(bj).block_until_ready()  # compile
-    return solve, bj, plan
+    solver.solve(bj).block_until_ready()  # compile
+    return solver.solve, bj, solver.exec_plan
 
 
 def geomean(xs: List[float]) -> float:

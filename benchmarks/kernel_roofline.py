@@ -7,7 +7,7 @@ from benchmarks.common import (
     K_CORES,
     dag_from_lower_csr,
     dataset,
-    grow_local,
+    schedule,
     solver_for,
     time_callable,
 )
@@ -20,7 +20,7 @@ def run(csv_rows):
           f"{'t_mem_us':>9s} {'t_comp_us':>9s} {'cpu_meas_us':>11s}")
     for mname, L in dataset("narrow_band") + dataset("erdos_renyi"):
         dag = dag_from_lower_csr(L)
-        sched = grow_local(dag, K_CORES)
+        sched = schedule(dag, K_CORES, strategy="growlocal")
         solve, b, plan = solver_for(L, sched)
         stats = plan.stats()
         flops = 2.0 * (L.nnz - L.n_rows) + L.n_rows

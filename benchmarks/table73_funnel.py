@@ -11,14 +11,9 @@ from benchmarks.common import (
     dag_from_lower_csr,
     dataset,
     geomean,
+    schedule,
 )
-from repro.core import (
-    coarsen_dag,
-    funnel_grow_local,
-    funnel_partition,
-    grow_local,
-    transitive_sparsify,
-)
+from repro.core import coarsen_dag, funnel_partition, transitive_sparsify
 
 
 def run(csv_rows):
@@ -30,10 +25,10 @@ def run(csv_rows):
         for mname, L in dataset(ds):
             dag = dag_from_lower_csr(L)
             t0 = time.perf_counter()
-            gl = grow_local(dag, K_CORES)
+            gl = schedule(dag, K_CORES, strategy="growlocal")
             t_gl = time.perf_counter() - t0
             t0 = time.perf_counter()
-            fgl = funnel_grow_local(dag, K_CORES)
+            fgl = schedule(dag, K_CORES, strategy="funnel-gl")
             t_fgl = time.perf_counter() - t0
             part = funnel_partition(transitive_sparsify(dag), max_size=64)
             c = coarsen_dag(transitive_sparsify(dag), part)

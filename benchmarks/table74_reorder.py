@@ -1,21 +1,16 @@
 """Paper Table 7.3 — impact of the §5 locality reordering: executor
-wall-clock with and without the symmetric permutation (same schedule)."""
+wall-clock with and without the symmetric permutation (same strategy,
+toggled through the pipeline's ``reorder`` option)."""
 from __future__ import annotations
 
 from benchmarks.common import (
     ALL_DATASETS,
     K_CORES,
-    compile_plan,
-    dag_from_lower_csr,
     dataset,
     geomean,
-    grow_local,
     solver_for,
     time_callable,
 )
-from repro.solver import make_solver
-import jax.numpy as jnp
-import numpy as np
 
 
 def run(csv_rows):
@@ -24,19 +19,14 @@ def run(csv_rows):
     for ds in ALL_DATASETS:
         gains = []
         for mname, L in dataset(ds):
-            dag = dag_from_lower_csr(L)
-            sched = grow_local(dag, K_CORES)
-            # with reordering
-            solve_r, b_r, _ = solver_for(L, sched)
+            # with reordering (pipeline default)
+            solve_r, b_r, _ = solver_for(L, strategy="growlocal", k=K_CORES)
             t_r = time_callable(lambda: solve_r(b_r).block_until_ready())
-            # without reordering: compile the plan on the ORIGINAL ids
-            plan = compile_plan(L, sched)
-            solve_n = make_solver(plan)
-            b = jnp.asarray(
-                np.random.default_rng(0).standard_normal(L.n_rows), jnp.float32
+            # without: the plan compiles on the ORIGINAL ids
+            solve_n, b_n, _ = solver_for(
+                L, strategy="growlocal", k=K_CORES, reorder=False
             )
-            solve_n(b).block_until_ready()
-            t_n = time_callable(lambda: solve_n(b).block_until_ready())
+            t_n = time_callable(lambda: solve_n(b_n).block_until_ready())
             gains.append(t_n / t_r)
         g = geomean(gains)
         print(f"{ds:14s} {g:12.3f}")

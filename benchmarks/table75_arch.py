@@ -16,7 +16,7 @@ from benchmarks.common import (
     dag_from_lower_csr,
     dataset,
     geomean,
-    grow_local,
+    schedule,
     solver_for,
     time_callable,
 )
@@ -29,7 +29,7 @@ def run(csv_rows):
     speedups = []
     for mname, L in dataset("erdos_renyi") + dataset("narrow_band"):
         dag = dag_from_lower_csr(L)
-        sched = grow_local(dag, K_CORES)
+        sched = schedule(dag, K_CORES, strategy="growlocal")
         solve, b, plan = solver_for(L, sched)
         t_jnp = time_callable(lambda: solve(b).block_until_ready(), reps=3)
         bb = np.asarray(b, dtype=np.float64)

@@ -8,7 +8,7 @@ from benchmarks.common import (
     dag_from_lower_csr,
     dataset,
     geomean,
-    grow_local,
+    schedule,
     serial_schedule,
 )
 from repro.sparse import average_wavefront_size
@@ -25,7 +25,7 @@ def run(csv_rows):
         ser = bsp_cost(dag, serial_schedule(dag))
         cells = []
         for k in CORES:
-            s = grow_local(dag, k)
+            s = schedule(dag, k, strategy="growlocal")
             sp = ser / bsp_cost(dag, s)
             rows[k].append(sp)
             cells.append(f"{sp:6.2f}")

@@ -10,9 +10,8 @@ from benchmarks.common import (
     dag_from_lower_csr,
     dataset,
     geomean,
-    grow_local,
+    schedule,
 )
-from repro.core import block_parallel_schedule
 
 BLOCKS = (1, 2, 4, 8, 16)
 
@@ -29,7 +28,7 @@ def run(csv_rows):
     for mname, L in mats:
         dag = dag_from_lower_csr(L)
         t0 = time.perf_counter()
-        s = grow_local(dag, K_CORES)
+        s = schedule(dag, K_CORES, strategy="growlocal")
         base_t[mname] = time.perf_counter() - t0
         base_cost[mname] = bsp_cost(dag, s)
         base_ss[mname] = s.n_supersteps
@@ -38,9 +37,7 @@ def run(csv_rows):
         for mname, L in mats:
             dag = dag_from_lower_csr(L)
             t0 = time.perf_counter()
-            s = block_parallel_schedule(
-                dag, K_CORES, nb, lambda d, k: grow_local(d, k)
-            )
+            s = schedule(dag, K_CORES, strategy="block", n_blocks=nb)
             t = time.perf_counter() - t0
             sp.append(base_t[mname] / t)
             cr.append(bsp_cost(dag, s) / base_cost[mname])

@@ -1,20 +1,13 @@
-"""Quickstart: schedule and solve one sparse triangular system.
+"""Quickstart: schedule and solve one sparse triangular system through the
+``repro.pipeline`` front door.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (
-    apply_reordering,
-    bsp_cost,
-    check_validity,
-    compile_plan,
-    grow_local,
-    hdagg_schedule,
-    schedule_stats,
-    serial_schedule,
-)
-from repro.solver import make_solver, solve_lower_scipy
+from repro.core import bsp_cost, check_validity, schedule_stats
+from repro.pipeline import PlanCache, TriangularSolver, schedule
+from repro.solver import solve_lower_scipy
 from repro.sparse import dag_from_lower_csr, ichol0, poisson2d_matrix
 
 # 1. a realistic matrix: IC(0) factor of a 2D Poisson problem
@@ -22,31 +15,44 @@ A = poisson2d_matrix(64)
 L = ichol0(A)
 print(f"matrix: n={L.n_rows} nnz={L.nnz}")
 
-# 2. build the solve DAG and run the paper's scheduler
+# 2. peek under the hood: the registry runs any strategy on the solve DAG
 dag = dag_from_lower_csr(L)
-sched = grow_local(dag, k=8)
+sched = schedule(dag, 8, strategy="growlocal")
 check_validity(dag, sched)
 stats = schedule_stats(dag, sched)
 print(f"GrowLocal: {stats['n_supersteps']} supersteps, "
       f"modeled speed-up {stats['speedup_model']:.2f}x")
-for name, s in [("serial", serial_schedule(dag)), ("hdagg", hdagg_schedule(dag, 8))]:
+for name in ("serial", "hdagg"):
+    s = schedule(dag, 8, strategy=name)
     print(f"  vs {name:7s}: BSP cost ratio "
           f"{bsp_cost(dag, s) / bsp_cost(dag, sched):.2f}x")
 
-# 3. reorder for locality (§5), compile the execution plan, solve
+# 3. the one-call pipeline: plan (DAG -> schedule -> reorder -> compile ->
+#    bind) and solve; permutations are handled internally
+cache = PlanCache()
+solver = TriangularSolver.plan(L, strategy="growlocal", k=8, cache=cache)
+print(f"plan: {solver.exec_plan.stats()}")
+
 rng = np.random.default_rng(0)
 b = rng.standard_normal(L.n_rows)
-L2, sched2, b2, r = apply_reordering(L, sched, b)
-plan = compile_plan(L2, sched2)
-print(f"plan: {plan.stats()}")
-solve = make_solver(plan)
-x2 = np.asarray(solve(b2))
+x = np.asarray(solver.solve(b))
 
-# 4. verify against scipy, un-permute
-x = np.empty_like(x2)
-x[r.perm] = x2
+# 4. verify against scipy
 x_ref = solve_lower_scipy(L, b)
 err = np.abs(x - x_ref).max() / np.abs(x_ref).max()
 print(f"relative error vs scipy: {err:.2e}")
 assert err < 1e-3
+
+# 5. batched multi-RHS: one plan traversal solves all columns
+B = rng.standard_normal((L.n_rows, 4))
+X = np.asarray(solver.solve(B))
+for j in range(B.shape[1]):
+    ref = solve_lower_scipy(L, B[:, j])
+    assert np.abs(X[:, j] - ref).max() / np.abs(ref).max() < 1e-3
+print(f"multi-RHS: solved {B.shape[1]} systems in one traversal")
+
+# 6. a second plan on the same pattern is a cache hit — no rescheduling
+TriangularSolver.plan(L, strategy="growlocal", k=8, cache=cache)
+print(f"cache: {cache.stats.as_dict()}")
+assert cache.stats.hits == 1
 print("OK")

@@ -1,12 +1,19 @@
 """Core library: the paper's scheduling contribution.
 
   * ``grow_local`` — the GrowLocal scheduler (§3, Alg. 3.1)
-  * ``funnel_partition`` / ``coarsen_dag`` / ``pull_back_schedule`` — §4
+  * ``funnel_grow_local`` / ``funnel_partition`` / ``coarsen_dag`` /
+    ``pull_back_schedule`` — §4 (``core/funnel.py`` / ``core/coarsen.py``)
   * ``apply_reordering`` — §5 locality reordering
   * ``block_parallel_schedule`` — §3.1
   * baselines: ``wavefront_schedule``, ``hdagg_schedule``, ``spmp_like_schedule``
   * ``Schedule`` / ``check_validity`` / ``bsp_cost`` — Def. 2.1 + cost model
   * ``compile_plan`` — schedule -> padded ExecPlan for the TPU executors
+
+These are the building blocks. The front door for actually *solving* —
+matrix in, bound solver out, with strategy selection, plan caching,
+forward/backward factor pairs and batched RHS — is ``repro.pipeline``
+(``TriangularSolver.plan(L)`` / ``factor_pair(Lf)``); prefer it over wiring
+these stages by hand.
 """
 from repro.core.blocks import block_parallel_schedule, block_sub_dag, split_ranges
 from repro.core.coarsen import (
@@ -17,6 +24,7 @@ from repro.core.coarsen import (
     pull_back_schedule,
     transitive_sparsify,
 )
+from repro.core.funnel import funnel_grow_local
 from repro.core.growlocal import grow_local
 from repro.core.hdagg import hdagg_schedule
 from repro.core.plan import ExecPlan, compile_plan
@@ -60,14 +68,3 @@ __all__ = [
     "ExecPlan",
     "compile_plan",
 ]
-
-
-def funnel_grow_local(dag, k, *, max_size: int = 64, L: float = DEFAULT_L,
-                      sparsify: bool = True):
-    """Funnel+GL (paper Tables 7.1–7.2): transitive sparsification, in-funnel
-    coarsening, GrowLocal on the coarse DAG, pull-back."""
-    work = transitive_sparsify(dag) if sparsify else dag
-    part = funnel_partition(work, max_size=max_size)
-    c = coarsen_dag(work, part)
-    coarse_sched = grow_local(c.coarse, k, L=L)
-    return pull_back_schedule(c, coarse_sched, dag.n)

@@ -44,6 +44,12 @@ class ExecPlan:
                                   sums (row split over multiple steps)
     step_bounds int32[S+1]     — superstep s covers steps
                                   [step_bounds[s], step_bounds[s+1])
+    val_src   int64[T, k, W]   — index into L.data feeding vals (-1 padding)
+    diag_src  int64[T, k]      — index into L.data feeding diag (-1 padding)
+
+    ``val_src``/``diag_src`` let a caller refresh the numeric values for a
+    new matrix with the *same* sparsity pattern without recompiling — the
+    plan-cache ``numeric_update`` path.
     """
 
     n: int
@@ -55,6 +61,19 @@ class ExecPlan:
     diag: np.ndarray
     accum: np.ndarray
     step_bounds: np.ndarray
+    val_src: np.ndarray | None = None
+    diag_src: np.ndarray | None = None
+
+    def numeric_update(self, data: np.ndarray) -> None:
+        """Overwrite ``vals``/``diag`` in place from ``data`` — the ``.data``
+        of a matrix with the sparsity pattern this plan was compiled for
+        (same entry order as the ``L`` passed to ``compile_plan``)."""
+        assert self.val_src is not None and self.diag_src is not None
+        data = np.asarray(data)
+        vmask = self.val_src >= 0
+        self.vals[vmask] = data[self.val_src[vmask]].astype(self.vals.dtype)
+        dmask = self.diag_src >= 0
+        self.diag[dmask] = data[self.diag_src[dmask]].astype(self.diag.dtype)
 
     @property
     def n_steps(self) -> int:
@@ -130,6 +149,8 @@ def compile_plan(
     vals = np.zeros((T, k, W), dtype=dtype)
     diag = np.ones((T, k), dtype=dtype)
     accum = np.zeros((T, k), dtype=bool)
+    val_src = np.full((T, k, W), -1, dtype=np.int64)
+    diag_src = np.full((T, k), -1, dtype=np.int64)
     # padding gathers read x[n] (scratch) -> harmless 0 contribution
     col_idx[:] = n
 
@@ -138,13 +159,19 @@ def compile_plan(
         for p in range(k):
             for t, (v, g, last) in enumerate(vrows[s][p]):
                 cols, values = L.row(v)
+                e0 = int(L.indptr[v])  # entry index of this row's first slot
                 off = cols != v
+                off_src = e0 + np.nonzero(off)[0]
                 cols, values = cols[off], values[off]
                 lo, hi = g * W, min((g + 1) * W, len(cols))
                 row_ids[base + t, p] = v
                 col_idx[base + t, p, : hi - lo] = cols[lo:hi]
                 vals[base + t, p, : hi - lo] = values[lo:hi]
+                val_src[base + t, p, : hi - lo] = off_src[lo:hi]
                 diag[base + t, p] = diag_vals[v]
+                dpos = np.nonzero(~off)[0]
+                if len(dpos):
+                    diag_src[base + t, p] = e0 + int(dpos[0])
                 accum[base + t, p] = not last
     return ExecPlan(
         n=n,
@@ -156,4 +183,6 @@ def compile_plan(
         diag=diag,
         accum=accum,
         step_bounds=np.asarray(step_bounds, dtype=np.int32),
+        val_src=val_src,
+        diag_src=diag_src,
     )

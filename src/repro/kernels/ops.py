@@ -40,6 +40,34 @@ def kernel_plan_arrays(plan: ExecPlan, *, steps_per_tile: int = 8, dtype=jnp.flo
     )
 
 
+def bind_kernel_solver(
+    plan: ExecPlan,
+    *,
+    steps_per_tile: int = 8,
+    dtype=jnp.float32,
+    interpret: bool | None = None,
+):
+    """Bind the plan tensors once; returns ``solve(b) -> x`` where ``b`` is
+    f[n] or f[n, m] (batched multi-RHS)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    arrays = kernel_plan_arrays(plan, steps_per_tile=steps_per_tile, dtype=dtype)
+    n = plan.n
+
+    def solve(b):
+        b = jnp.asarray(b, dtype=dtype)
+        pad = jnp.zeros((1, *b.shape[1:]), dtype=dtype)
+        x = sptrsv_pallas(
+            *arrays,
+            jnp.concatenate([b, pad]),
+            steps_per_tile=steps_per_tile,
+            interpret=interpret,
+        )
+        return x[:n]
+
+    return solve
+
+
 def sptrsv_kernel_solve(
     plan: ExecPlan,
     b,
@@ -48,14 +76,9 @@ def sptrsv_kernel_solve(
     dtype=jnp.float32,
     interpret: bool | None = None,
 ):
-    """Solve L x = b with the Pallas kernel. Returns x f[n]."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    arrays = kernel_plan_arrays(plan, steps_per_tile=steps_per_tile, dtype=dtype)
-    b_pad = jnp.concatenate(
-        [jnp.asarray(b, dtype=dtype), jnp.zeros(1, dtype=dtype)]
+    """Solve L x = b with the Pallas kernel. ``b``: f[n] (returns x f[n]) or
+    f[n, m] for a batched multi-RHS solve (returns x f[n, m])."""
+    solve = bind_kernel_solver(
+        plan, steps_per_tile=steps_per_tile, dtype=dtype, interpret=interpret
     )
-    x = sptrsv_pallas(
-        *arrays, b_pad, steps_per_tile=steps_per_tile, interpret=interpret
-    )
-    return x[: plan.n]
+    return solve(b)

@@ -83,6 +83,50 @@ def _sptrsv_kernel(
     jax.lax.fori_loop(0, steps_per_tile, body, ())
 
 
+def _sptrsv_mrhs_kernel(
+    row_ref,  # int32[S, k]
+    col_ref,  # int32[S, k, W]
+    val_ref,  # f[S, k, W]
+    diag_ref,  # f[S, k]
+    accum_ref,  # f[S, k]
+    b_ref,  # f[n+1, m]  (resident; m RHS lane-major)
+    x_in_ref,  # f[n+1, m]
+    x_ref,  # f[n+1, m]  (aliased in/out, resident)
+    acc_ref,  # f[k, m] scratch — per-lane, per-RHS partial sums
+    *,
+    steps_per_tile: int,
+):
+    """Multi-RHS variant: identical control flow to ``_sptrsv_kernel``, but
+    every x slot is a length-m vector (RHS index = minor/lane axis, so the
+    m solves share one gather of indices and widen only the value lanes)."""
+    del x_in_ref
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(t, _):
+        rows = row_ref[t]  # int32[k]
+        cols = col_ref[t]  # int32[k, W]
+        v = val_ref[t]  # f[k, W]
+        d = diag_ref[t]
+        a = accum_ref[t]
+        x = x_ref[...]  # f[n+1, m]
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(*cols.shape, -1)
+        acc = acc_ref[...] + jnp.sum(v[..., None] * gathered, axis=1)
+        b_rows = jnp.take(b_ref[...], rows, axis=0)  # f[k, m]
+        xv = (b_rows - acc) / d[:, None]
+        keep = (a > 0.5)[:, None]  # still accumulating
+        old = jnp.take(x, rows, axis=0)
+        write = jnp.where(keep, old, xv)
+        x_ref[...] = x.at[rows].set(write)
+        acc_ref[...] = jnp.where(keep, acc, 0.0)
+        return ()
+
+    jax.lax.fori_loop(0, steps_per_tile, body, ())
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("steps_per_tile", "interpret"),
@@ -93,30 +137,39 @@ def sptrsv_pallas(
     vals,  # f[T, k, W]
     diag,  # f[T, k]
     accum_mask,  # f[T, k] (0/1)
-    b_pad,  # f[n+1]
+    b_pad,  # f[n+1] or f[n+1, m] (multi-RHS)
     *,
     steps_per_tile: int = 8,
     interpret: bool = False,
 ):
-    """Run the full scheduled solve; returns x f[n+1] (last slot scratch)."""
+    """Run the full scheduled solve; returns x shaped like ``b_pad`` (last
+    row is scratch). A 2-D ``b_pad`` solves all m RHS in one pass."""
     T, k = row_ids.shape
     W = col_idx.shape[-1]
     assert T % steps_per_tile == 0, "pad T to a multiple of steps_per_tile"
     n_tiles = T // steps_per_tile
+    multi_rhs = b_pad.ndim == 2
     x0 = jnp.zeros_like(b_pad)
 
     grid = (n_tiles,)
     tile = lambda *tail: pl.BlockSpec(  # noqa: E731
         (steps_per_tile, *tail), lambda i: (i, *([0] * len(tail)))
     )
-    resident = pl.BlockSpec(b_pad.shape, lambda i: (0,))
+    resident = pl.BlockSpec(b_pad.shape, lambda i: (0,) * b_pad.ndim)
 
-    kernel = functools.partial(_sptrsv_kernel, steps_per_tile=steps_per_tile)
+    if multi_rhs:
+        kernel = functools.partial(
+            _sptrsv_mrhs_kernel, steps_per_tile=steps_per_tile
+        )
+        acc_shape = (k, b_pad.shape[1])
+    else:
+        kernel = functools.partial(_sptrsv_kernel, steps_per_tile=steps_per_tile)
+        acc_shape = (k,)
     # pltpu.VMEM scratch persists across (sequential) grid steps — the
     # accumulator for rows split over multiple tiles. Interpret mode honours
     # it on CPU.
     assert _VMEM is not None, "pltpu namespace unavailable"
-    scratch_shapes = [_VMEM((k,), vals.dtype)]
+    scratch_shapes = [_VMEM(acc_shape, vals.dtype)]
 
     compiler_params = None
     if not interpret:

@@ -237,13 +237,11 @@ def _memory_dict(compiled) -> dict:
 
 def roofline_terms(compiled, hlo_text: str, chips: int) -> dict:
     """Trip-count-aware roofline terms (per device) + raw XLA numbers."""
-    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
     from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
     cost = analyze_hlo(hlo_text)
-    xla = compiled.cost_analysis()
-    if isinstance(xla, list):
-        xla = xla[0]
+    xla = xla_cost_analysis(compiled)
     t_comp = cost.flops / PEAK_FLOPS
     t_mem = cost.hbm_bytes / HBM_BW
     t_coll = cost.collective_bytes / ICI_BW
@@ -317,9 +315,9 @@ SPTRSV_SHAPES = {
 
 def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
                     save: bool = True) -> dict:
-    from repro.core import apply_reordering, compile_plan, grow_local
+    from repro.pipeline import TriangularSolver
     from repro.solver.distributed import dist_plan_spec, lower_distributed_solve
-    from repro.sparse import dag_from_lower_csr, erdos_renyi_lower, narrow_band_lower
+    from repro.sparse import erdos_renyi_lower, narrow_band_lower
 
     t0 = time.time()
     tag = f"sptrsv.{shape_name}" + (".mp" if multi_pod else "")
@@ -332,11 +330,8 @@ def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
         L = erdos_renyi_lower(spec["n"], spec["p"], seed=1)
     else:
         L = narrow_band_lower(spec["n"], spec["p"], spec["band"], seed=1)
-    dag = dag_from_lower_csr(L)
-    sched = grow_local(dag, k)
-    L2, s2, _, _ = apply_reordering(L, sched)
-    plan = compile_plan(L2, s2)
-    dspec = dist_plan_spec(plan, batch=spec["batch"])
+    solver = TriangularSolver.plan(L, strategy="growlocal", k=k)
+    dspec = dist_plan_spec(solver.exec_plan, batch=spec["batch"])
     try:
         with mesh:
             lowered = lower_distributed_solve(dspec, mesh)

@@ -51,6 +51,19 @@ _COLLECTIVES = (
     "collective-permute",
 )
 
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized to a flat dict.
+
+    jax <= 0.4.30 returns ``{...}``; newer versions return ``[{...}]`` (one
+    entry per executable). Every consumer in this repo wants the flat
+    dict — normalize in exactly one place.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
 _OPNAME_RE = re.compile(
     r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)\s+([a-z][a-z0-9\-]*)\("
 )

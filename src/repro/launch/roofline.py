@@ -18,6 +18,8 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+from repro.launch.hlo_analysis import xla_cost_analysis
+
 # TPU v5e per-chip constants (assignment-specified)
 PEAK_FLOPS = 197e12  # bf16
 HBM_BW = 819e9  # bytes/s
@@ -129,9 +131,7 @@ class RooflineTerms:
 
 
 def analyze(compiled, hlo_text: str, chips: int) -> RooflineTerms:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):  # older jax returns [dict]
-        cost = cost[0]
+    cost = xla_cost_analysis(compiled)
     colls = collective_bytes_from_hlo(hlo_text)
     counts = colls.pop("_counts")
     return RooflineTerms(

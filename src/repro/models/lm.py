@@ -291,6 +291,22 @@ def _hybrid_block(cfg: ModelConfig, params, h, cos, sin, kind: str):
     return h + ff
 
 
+@jax.custom_vjp
+def _grad_safe_barrier(h):
+    return jax.lax.optimization_barrier(h)
+
+
+def _grad_safe_barrier_fwd(h):
+    return jax.lax.optimization_barrier(h), None
+
+
+def _grad_safe_barrier_bwd(_, g):
+    return (g,)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
+
+
 def _maybe_remat(f, cfg: ModelConfig, train: bool):
     if train and cfg.remat:
         def barriered(h, lp):
@@ -302,7 +318,10 @@ def _maybe_remat(f, cfg: ModelConfig, train: bool):
             # at once (2x the remat budget). The barrier must sit INSIDE
             # the rematted region so the recompute path starts from it —
             # found via the §Perf granite/mistral train iterations.
-            h = jax.lax.optimization_barrier(h)
+            # optimization_barrier has no differentiation rule, so it is
+            # wrapped in a custom_vjp that barriers the primal and passes
+            # cotangents straight through.
+            h = _grad_safe_barrier(h)
             return f(h, lp)
 
         return jax.checkpoint(

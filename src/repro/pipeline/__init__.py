@@ -1,0 +1,41 @@
+"""The front door for every triangular solve in the repo.
+
+One call chain replaces the hand-wired matrix -> DAG -> scheduler ->
+reorder -> ``compile_plan`` -> executor plumbing that used to be copied
+into every example, benchmark and the CG driver:
+
+    from repro.pipeline import TriangularSolver, PlanCache, factor_pair
+
+    cache = PlanCache()
+    solver = TriangularSolver.plan(L, strategy="funnel-gl", k=8, cache=cache)
+    x = solver.solve(b)           # b: f[n] or batched f[n, m]
+
+    fwd, bwd = factor_pair(Lf)    # L y = b, then L^T x = y (PCG's M^{-1})
+
+Module map:
+
+  * ``registry``  — named scheduling strategies behind one signature
+  * ``solver``    — ``TriangularSolver`` / ``factor_pair`` (plan + bind)
+  * ``cache``     — sparsity-pattern-keyed plan cache with hit/miss stats
+"""
+from repro.pipeline.cache import CacheStats, PlanCache
+from repro.pipeline.registry import (
+    ScheduleOptions,
+    available_strategies,
+    get_scheduler,
+    register_scheduler,
+    schedule,
+)
+from repro.pipeline.solver import TriangularSolver, factor_pair
+
+__all__ = [
+    "CacheStats",
+    "PlanCache",
+    "ScheduleOptions",
+    "available_strategies",
+    "get_scheduler",
+    "register_scheduler",
+    "schedule",
+    "TriangularSolver",
+    "factor_pair",
+]

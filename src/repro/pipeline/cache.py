@@ -1,0 +1,89 @@
+"""Plan cache — pay the inspector once per sparsity pattern.
+
+The paper's motivating workload (§1, Table 7.7) reuses one sparsity
+pattern across hundreds of solves; iterative methods even reuse it across
+*factorizations* (same pattern, new values every Newton step). The cache
+keys on everything that determines the compiled plan:
+
+    (pattern fingerprint, strategy, k, W, dtype, backend, lower, reorder)
+
+On a hit the whole DAG-build -> schedule -> reorder -> compile chain is
+skipped; only the numeric values are refreshed in place (``numeric_update``
+via the plan's value-source maps), which is O(nnz) instead of
+O(|E| log |V|).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Hashable, Optional
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    numeric_updates: int = 0
+    evictions: int = 0
+
+    @property
+    def entries_built(self) -> int:
+        return self.misses
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """LRU cache from plan key -> bound ``TriangularSolver``. Thread-safe;
+    shared freely across solves, requests and factor pairs."""
+
+    def __init__(self, maxsize: Optional[int] = None):
+        self.maxsize = maxsize
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Hashable, object]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], object]):
+        """Return ``(entry, hit)``. ``builder`` runs outside the lock on a
+        miss — concurrent misses on the same key keep the first-inserted
+        entry (last writer returns the canonical one)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry, True
+        built = builder()
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:  # lost the race; count as a hit
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry, True
+            self.stats.misses += 1
+            self._entries[key] = built
+            if self.maxsize is not None and len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return built, False
+
+    def replace(self, key: Hashable, entry: object) -> None:
+        """Swap the canonical entry for ``key`` (e.g. after a value
+        refresh). No-op on the stats; the key must already exist or the
+        entry is simply inserted."""
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+
+    def note_numeric_update(self) -> None:
+        with self._lock:
+            self.stats.numeric_updates += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()

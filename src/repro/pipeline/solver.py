@@ -1,0 +1,362 @@
+"""``TriangularSolver`` — plan once, solve many times.
+
+``TriangularSolver.plan(L)`` runs the full inspector pipeline
+
+    DAG build -> schedule (registry strategy) -> §5 reordering ->
+    ``compile_plan`` -> backend binding (scan | pallas | distributed)
+
+and returns a bound solver whose ``solve(b)`` applies and undoes every
+permutation internally — callers never see reordered indices. ``b`` may be
+``f[n]`` or batched ``f[n, m]`` (multi-RHS; one plan traversal).
+
+``lower=False`` solves an *upper*-triangular system via the
+reverse-permutation trick (an upper-triangular matrix reversed
+symmetrically is lower triangular again), which together with
+``factor_pair`` gives the forward/backward pair PCG needs:
+
+    fwd, bwd = factor_pair(Lf)        # Lf y = b, then Lf^T x = y
+
+Pass a ``PlanCache`` to amortize the inspector across solves that share a
+sparsity pattern — hits skip scheduling entirely and only refresh the
+numeric values (paper §7.7's regime).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply_reordering, compile_plan
+from repro.core.plan import ExecPlan
+from repro.pipeline.cache import PlanCache
+from repro.pipeline.registry import ScheduleOptions, get_scheduler
+from repro.sparse.csr import (
+    CSRMatrix,
+    pattern_fingerprint,
+    permute_symmetric,
+    transpose_csr,
+)
+from repro.sparse.dag import dag_from_lower_csr
+
+BACKENDS = ("scan", "pallas", "distributed")
+
+
+def _entry_permutation(m: CSRMatrix, perm: np.ndarray) -> np.ndarray:
+    """``e`` such that ``permute_symmetric(m, perm).data == m.data[e]``.
+
+    Rides the entry *ids* through the same permutation as the values (ids
+    stay exact in float64 up to 2^53 entries; patterns here are << that).
+    """
+    carrier = CSRMatrix(
+        n_rows=m.n_rows,
+        n_cols=m.n_cols,
+        indptr=m.indptr,
+        indices=m.indices,
+        data=np.arange(m.nnz, dtype=np.float64),
+    )
+    return permute_symmetric(carrier, perm).data.astype(np.int64)
+
+
+class TriangularSolver:
+    """A bound, permutation-transparent triangular solver. Construct via
+    :meth:`plan` (or :func:`factor_pair`), not directly."""
+
+    def __init__(
+        self,
+        *,
+        exec_plan: ExecPlan,
+        total_perm: np.ndarray,
+        backend: str,
+        dtype,
+        fingerprint: str,
+        strategy: str,
+        lower: bool,
+        inspector_seconds: float,
+        mesh=None,
+        steps_per_tile: int = 8,
+        interpret: Optional[bool] = None,
+    ):
+        self.exec_plan = exec_plan
+        self.backend = backend
+        self.dtype = dtype
+        self.fingerprint = fingerprint
+        self.strategy = strategy
+        self.lower = lower
+        self.inspector_seconds = inspector_seconds
+        self._mesh = mesh
+        self._steps_per_tile = steps_per_tile
+        self._interpret = interpret
+        self._source_data: Optional[np.ndarray] = None  # set by plan()
+        total_inv = np.empty_like(total_perm)
+        total_inv[total_perm] = np.arange(len(total_perm))
+        self._perm = jnp.asarray(total_perm, jnp.int32)
+        self._inv = jnp.asarray(total_inv, jnp.int32)
+        self._bind()
+
+    # ---------------------------------------------------------- binding
+    def _bind(self) -> None:
+        """(Re)bind device-resident plan tensors — called at construction
+        and after every ``numeric_update``."""
+        if self.backend == "scan":
+            from repro.solver.executor import plan_arrays, solve_with_plan
+
+            pa = plan_arrays(self.exec_plan, dtype=self.dtype)
+            self._exec = lambda bp: solve_with_plan(pa, bp)
+        elif self.backend == "pallas":
+            from repro.kernels.ops import bind_kernel_solver
+
+            self._exec = bind_kernel_solver(
+                self.exec_plan,
+                steps_per_tile=self._steps_per_tile,
+                dtype=self.dtype,
+                interpret=self._interpret,
+            )
+        elif self.backend == "distributed":
+            import jax
+
+            from repro.solver.distributed import (
+                build_distributed_solver,
+                dist_plan_spec,
+            )
+
+            if self._mesh is None:
+                raise ValueError("backend='distributed' requires a mesh")
+            mesh = self._mesh
+            plan = self.exec_plan
+            data_ax = mesh.shape["data"]
+            # plan tensors transfer once; the jitted sharded solve is cached
+            # per (padded) batch size — batch is static in the lowered graph
+            args = (
+                jnp.asarray(plan.row_ids, jnp.int32),
+                jnp.asarray(plan.col_idx, jnp.int32),
+                jnp.asarray(plan.vals, self.dtype),
+                jnp.asarray(plan.diag, self.dtype),
+                jnp.asarray(plan.accum.astype(np.dtype(self.dtype))),
+            )
+            jitted = {}
+
+            def _exec(bp):
+                b2 = np.asarray(bp)
+                single = b2.ndim == 1
+                b2 = b2[None, :] if single else np.ascontiguousarray(b2.T)
+                B = b2.shape[0]
+                # the batch shards over 'data': pad it to a multiple
+                Bp = -(-B // data_ax) * data_ax
+                b2 = np.concatenate(
+                    [b2, np.zeros((Bp - B, b2.shape[1]), b2.dtype)]
+                )
+                b_pad = np.concatenate(
+                    [b2, np.zeros((Bp, 1), b2.dtype)], axis=1
+                )
+                fn = jitted.get(Bp)
+                if fn is None:
+                    spec = dist_plan_spec(
+                        plan, batch=Bp, dtype=np.dtype(self.dtype)
+                    )
+                    fn = jax.jit(build_distributed_solver(spec, mesh))
+                    jitted[Bp] = fn
+                with mesh:
+                    x = fn(*args, jnp.asarray(b_pad, self.dtype))
+                x = np.asarray(x)[:, : plan.n]
+                return jnp.asarray(x[0] if single else x[:B].T)
+
+            self._exec = _exec
+        else:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+
+    # ---------------------------------------------------------- solving
+    def solve(self, b):
+        """Solve the planned system for ``b``: f[n] or f[n, m] (multi-RHS).
+        Input/output live in the caller's original row ordering."""
+        b = jnp.asarray(b, self.dtype)
+        # XLA clamps out-of-range gather indices, so a mis-sized b would
+        # silently produce garbage — reject it here.
+        if b.ndim not in (1, 2) or b.shape[0] != self.n:
+            raise ValueError(
+                f"b must be [n] or [n, m] with n={self.n}; got {b.shape}"
+            )
+        x = self._exec(b[self._perm])
+        return x[self._inv]
+
+    __call__ = solve
+
+    def numeric_update(self, a) -> None:
+        """Refresh values from ``a`` — a CSRMatrix with the planned sparsity
+        pattern, or its raw ``.data`` — without rescheduling. Mutates THIS
+        solver in place (plan-cache hits clone instead, so solvers returned
+        from earlier ``plan`` calls are never touched behind their backs)."""
+        if isinstance(a, CSRMatrix):
+            if pattern_fingerprint(a) != self.fingerprint:
+                raise ValueError(
+                    "numeric_update requires the sparsity pattern the plan "
+                    "was built for (pattern fingerprint mismatch)"
+                )
+            data = a.data
+        else:
+            data = np.asarray(a)
+        self.exec_plan.numeric_update(data)
+        self._source_data = np.array(data)
+        self._bind()
+
+    def _with_values(self, data: np.ndarray) -> "TriangularSolver":
+        """A sibling solver with new numeric values: shares the (read-only)
+        schedule/index structure, owns its value tensors and binding."""
+        import copy
+        import dataclasses
+
+        new = copy.copy(self)
+        new.exec_plan = dataclasses.replace(
+            self.exec_plan,
+            vals=self.exec_plan.vals.copy(),
+            diag=self.exec_plan.diag.copy(),
+        )
+        new.numeric_update(data)
+        return new
+
+    @property
+    def n(self) -> int:
+        return self.exec_plan.n
+
+    @property
+    def n_supersteps(self) -> int:
+        return self.exec_plan.n_supersteps
+
+    def info(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "backend": self.backend,
+            "lower": self.lower,
+            "n_supersteps": self.n_supersteps,
+            "inspector_seconds": self.inspector_seconds,
+            "plan": self.exec_plan.stats(),
+        }
+
+    # ---------------------------------------------------------- planning
+    @classmethod
+    def plan(
+        cls,
+        a: CSRMatrix,
+        *,
+        strategy: str = "growlocal",
+        backend: str = "scan",
+        lower: bool = True,
+        k: Optional[int] = None,
+        dtype=jnp.float32,
+        width: Optional[int] = None,
+        options: Optional[ScheduleOptions] = None,
+        cache: Optional[PlanCache] = None,
+        mesh=None,
+        steps_per_tile: int = 8,
+        interpret: Optional[bool] = None,
+        sched=None,
+        **opts,
+    ) -> "TriangularSolver":
+        """Plan a solver for triangular ``a`` (lower, or upper with
+        ``lower=False``). With ``cache``, a repeated sparsity pattern skips
+        the inspector: identical values return the cached solver as-is; new
+        values return a clone with refreshed numerics (solvers from earlier
+        calls are never mutated). ``sched`` bypasses the registry with a
+        pre-built Schedule (never cached — the cache cannot key on
+        arbitrary schedules)."""
+        o = options or ScheduleOptions()
+        if k is not None:
+            o = o.replace(k=k)
+        if opts:
+            o = o.replace(**opts)
+
+        fp = pattern_fingerprint(a)
+        # o (a frozen dataclass) covers every scheduling knob incl. k and
+        # reorder; binding params (mesh identity, tile size, interpret) also
+        # change the built solver and must key too.
+        key = (
+            fp,
+            strategy,
+            o,
+            width if width is not None else "auto",
+            np.dtype(dtype).str,
+            backend,
+            lower,
+            id(mesh) if mesh is not None else None,
+            steps_per_tile,
+            interpret,
+        )
+
+        def build() -> "TriangularSolver":
+            t0 = time.perf_counter()
+            n = a.n_rows
+            if lower:
+                assert a.is_lower_triangular(), "expected a lower-triangular matrix"
+                m0, outer = a, None
+            else:
+                assert bool(
+                    np.all(a.indices >= a.row_of_entry())
+                ), "lower=False expects an upper-triangular matrix"
+                # reversed symmetrically, an upper-triangular matrix is
+                # lower triangular again (the L^T trick, paper §5 footnote)
+                outer = np.arange(n, dtype=np.int64)[::-1].copy()
+                m0 = permute_symmetric(a, outer)
+
+            if sched is None:
+                dag = dag_from_lower_csr(m0)
+                s = get_scheduler(strategy)(dag, o)
+            else:
+                s = sched
+            if o.reorder:
+                m2, s2, _, r = apply_reordering(m0, s)
+                inner = r.perm
+            else:
+                m2, s2, inner = m0, s, np.arange(n, dtype=np.int64)
+
+            plan = compile_plan(m2, s2, width=width, dtype=np.dtype(dtype))
+
+            # rebase the plan's value-source maps onto a's entry order so
+            # numeric_update() consumes a.data directly
+            entry_map = _entry_permutation(m0, inner)  # m2 entry -> m0 entry
+            if outer is not None:
+                entry_map = _entry_permutation(a, outer)[entry_map]
+            vmask = plan.val_src >= 0
+            plan.val_src[vmask] = entry_map[plan.val_src[vmask]]
+            dmask = plan.diag_src >= 0
+            plan.diag_src[dmask] = entry_map[plan.diag_src[dmask]]
+
+            total_perm = inner if outer is None else outer[inner]
+            solver = cls(
+                exec_plan=plan,
+                total_perm=total_perm,
+                backend=backend,
+                dtype=dtype,
+                fingerprint=fp,
+                strategy=strategy if sched is None else "(prebuilt)",
+                lower=lower,
+                inspector_seconds=time.perf_counter() - t0,
+                mesh=mesh,
+                steps_per_tile=steps_per_tile,
+                interpret=interpret,
+            )
+            solver._source_data = np.array(a.data)
+            return solver
+
+        if cache is None or sched is not None:
+            return build()
+        solver, hit = cache.get_or_build(key, build)
+        if hit and not np.array_equal(solver._source_data, a.data):
+            # same pattern, new values: clone with refreshed numerics (the
+            # cached entry — and anyone holding it — stays untouched), then
+            # make the clone canonical so repeats of THESE values are free
+            solver = solver._with_values(a.data)
+            cache.replace(key, solver)
+            cache.note_numeric_update()
+        return solver
+
+
+def factor_pair(lf: CSRMatrix, *, cache: Optional[PlanCache] = None, **kw):
+    """Plan the (L, L^T) solver pair of a factorization: ``fwd`` solves
+    ``Lf y = b``, ``bwd`` solves ``Lf^T x = y`` — together an application of
+    ``(Lf Lf^T)^{-1}``, PCG's preconditioner."""
+    fwd = TriangularSolver.plan(lf, lower=True, cache=cache, **kw)
+    bwd = TriangularSolver.plan(transpose_csr(lf), lower=False, cache=cache, **kw)
+    return fwd, bwd

@@ -2,9 +2,10 @@
 
 This is the application the paper motivates (§1: iterative methods reuse one
 sparsity pattern across many solves — IC(0)-preconditioned CG does two
-triangular solves per iteration). ``pcg_ichol`` wires the whole pipeline:
-IC(0) -> GrowLocal schedule -> reorder -> ExecPlan for L and L^T -> CG loop
-in JAX, with the triangular solves executed by the scheduled executor.
+triangular solves per iteration). ``pcg_ichol`` is now a thin client of the
+``repro.pipeline`` front door: IC(0), then ``factor_pair`` plans the
+scheduled (L, L^T) solver pair — all permutation plumbing lives inside
+``TriangularSolver``.
 """
 from __future__ import annotations
 
@@ -14,10 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import apply_reordering, compile_plan, grow_local
-from repro.solver.executor import make_solver
-from repro.sparse.csr import CSRMatrix, transpose_csr
-from repro.sparse.dag import dag_from_lower_csr
+from repro.pipeline import PlanCache, factor_pair
+from repro.sparse.csr import CSRMatrix
 from repro.sparse.ichol import ichol0
 
 
@@ -80,54 +79,30 @@ def pcg_ichol(
     b: np.ndarray,
     *,
     k: int = 8,
+    strategy: str = "growlocal",
     tol: float = 1e-6,
     maxiter: int = 1000,
     dtype=jnp.float32,
+    cache: Optional[PlanCache] = None,
 ):
-    """End-to-end driver: IC(0) + GrowLocal-scheduled triangular solves as
-    the CG preconditioner. Returns (x, iters, relres, info-dict)."""
+    """End-to-end driver: IC(0) + scheduled triangular solves as the CG
+    preconditioner. Returns (x, iters, relres, info-dict). Pass a
+    ``PlanCache`` to reuse plans across calls on one sparsity pattern."""
     Lf = ichol0(a)
-    dag = dag_from_lower_csr(Lf)
-    sched = grow_local(dag, k)
-    L2, s2, _, r = apply_reordering(Lf, sched)
-    fwd_plan = compile_plan(L2, s2, dtype=np.dtype(dtype))
-    solve_fwd = make_solver(fwd_plan, dtype=dtype)
+    fwd, bwd = factor_pair(Lf, strategy=strategy, k=k, dtype=dtype, cache=cache)
 
-    # backward solve: L^T x = y  <=>  forward solve on reversed ordering.
-    # (L^T reversed symmetrically is lower triangular again.)
-    U = transpose_csr(L2)
-    rev = np.arange(L2.n_rows)[::-1].copy()
-    from repro.sparse.csr import permute_symmetric
-
-    U_rev = permute_symmetric(U, rev)
-    dag_u = dag_from_lower_csr(U_rev)
-    sched_u = grow_local(dag_u, k)
-    U2, su2, _, ru = apply_reordering(U_rev, sched_u)
-    bwd_plan = compile_plan(U2, su2, dtype=np.dtype(dtype))
-    solve_bwd = make_solver(bwd_plan, dtype=dtype)
-
-    perm = jnp.asarray(r.perm)  # fine ids: new -> old
-    inv = jnp.asarray(r.inv)
-    rev_j = jnp.asarray(rev)
-    perm_u = jnp.asarray(ru.perm)
-    inv_u = jnp.asarray(ru.inv)
-
-    def precond(res):
-        # z = (L L^T)^{-1} res, all in the reordered bases
-        y = solve_fwd(res[perm])  # L2 y = P res
-        yr = y[rev_j][perm_u]  # into U2's basis
-        z2 = solve_bwd(yr)
-        # back out: undo U2 reordering, undo reversal, undo L2 reordering
-        z = z2[inv_u][rev_j][inv]
-        return z
+    def precond(res):  # z = (L L^T)^{-1} res
+        return bwd(fwd(res))
 
     x, iters, relres = cg_solve(
         a, b, precond=precond, tol=tol, maxiter=maxiter, dtype=dtype
     )
     info = {
-        "fwd_supersteps": s2.n_supersteps,
-        "bwd_supersteps": su2.n_supersteps,
-        "fwd_plan": fwd_plan.stats(),
-        "bwd_plan": bwd_plan.stats(),
+        "fwd_supersteps": fwd.n_supersteps,
+        "bwd_supersteps": bwd.n_supersteps,
+        "fwd_plan": fwd.exec_plan.stats(),
+        "bwd_plan": bwd.exec_plan.stats(),
     }
+    if cache is not None:
+        info["cache"] = cache.stats.as_dict()
     return x, iters, relres, info

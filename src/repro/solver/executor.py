@@ -73,16 +73,44 @@ def _solve_scan(row_ids, col_idx, vals, diag, accum, b_pad, n):
     return x[:n]
 
 
-def solve_with_plan(pa: PlanArrays, b: jax.Array) -> jax.Array:
-    """Solve L x = b using the compiled plan. ``b``: f[n]."""
-    b_pad = jnp.concatenate([b.astype(pa.vals.dtype), jnp.zeros(1, pa.vals.dtype)])
-    return _solve_scan(
-        pa.row_ids, pa.col_idx, pa.vals, pa.diag, pa.accum, b_pad, pa.n
+@partial(jax.jit, static_argnames=("n",))
+def _solve_scan_mrhs(row_ids, col_idx, vals, diag, accum, b_pad, n):
+    """Batched SpTRSM: ``b_pad`` f[n+1, m], carry ``x`` f[n+1, m]. One plan
+    traversal solves all m right-hand sides (the gather/scatter indices are
+    shared; only the value lanes widen)."""
+    m = b_pad.shape[1]
+    x0 = jnp.zeros((n + 1, m), dtype=b_pad.dtype)
+    acc0 = jnp.zeros((row_ids.shape[1], m), dtype=b_pad.dtype)
+
+    def step(carry, inp):
+        x, acc = carry
+        rows, cols, v, d, a = inp
+        acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
+        xv = (b_pad[rows] - acc) / d[:, None]
+        write = jnp.where(a[:, None], x[rows], xv)
+        x = x.at[rows].set(write)
+        acc = jnp.where(a[:, None], acc, 0.0)
+        return (x, acc), None
+
+    (x, _), _ = jax.lax.scan(
+        step, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
     )
+    return x[:n]
+
+
+def solve_with_plan(pa: PlanArrays, b: jax.Array) -> jax.Array:
+    """Solve L x = b using the compiled plan. ``b``: f[n] or f[n, m]
+    (multi-RHS — solved in one batched traversal)."""
+    b = b.astype(pa.vals.dtype)
+    pad = jnp.zeros((1, *b.shape[1:]), pa.vals.dtype)
+    b_pad = jnp.concatenate([b, pad])
+    solver = _solve_scan if b.ndim == 1 else _solve_scan_mrhs
+    return solver(pa.row_ids, pa.col_idx, pa.vals, pa.diag, pa.accum, b_pad, pa.n)
 
 
 def make_solver(plan: ExecPlan, dtype=jnp.float32):
-    """Bind a plan; returns ``solve(b) -> x`` (jit-compiled on first call)."""
+    """Bind a plan; returns ``solve(b) -> x`` (jit-compiled on first call).
+    ``b`` may be f[n] or f[n, m] for a batched multi-RHS solve."""
     pa = plan_arrays(plan, dtype=dtype)
 
     def solve(b):

@@ -10,6 +10,7 @@ from repro.sparse.csr import (
     csr_from_dense,
     csr_to_dense,
     lower_triangle_of,
+    pattern_fingerprint,
     permute_symmetric,
     transpose_csr,
 )
@@ -35,6 +36,7 @@ __all__ = [
     "csr_from_dense",
     "csr_to_dense",
     "lower_triangle_of",
+    "pattern_fingerprint",
     "permute_symmetric",
     "transpose_csr",
     "SolveDAG",

@@ -85,6 +85,22 @@ class CSRMatrix:
         )
 
 
+def pattern_fingerprint(m: CSRMatrix) -> str:
+    """Stable hash of the *sparsity pattern* (shape + indptr + indices).
+
+    Deliberately ignores ``data``: two factors with identical structure but
+    different values share schedules and plan tensors' shapes, which is what
+    the pipeline plan cache keys on (values refresh via ``numeric_update``).
+    """
+    import hashlib
+
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64([m.n_rows, m.n_cols]).tobytes())
+    h.update(np.ascontiguousarray(m.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.indices, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
 def csr_from_coo(
     n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray
 ) -> CSRMatrix:

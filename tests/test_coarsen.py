@@ -2,7 +2,7 @@
 properties, transitive sparsification correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import (
     check_validity,

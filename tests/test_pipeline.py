@@ -1,0 +1,239 @@
+"""The ``repro.pipeline`` front door: registry round-trips, plan-cache
+hit/miss + numeric refresh, upper-triangular (``lower=False``) solves, and
+batched multi-RHS on both executors."""
+import numpy as np
+import pytest
+
+from repro.core import check_validity, grow_local
+from repro.pipeline import (
+    PlanCache,
+    ScheduleOptions,
+    TriangularSolver,
+    available_strategies,
+    factor_pair,
+    get_scheduler,
+    register_scheduler,
+    schedule,
+)
+from repro.solver import solve_lower_scipy
+from repro.sparse import (
+    CSRMatrix,
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    ichol0,
+    narrow_band_lower,
+    poisson2d_matrix,
+    transpose_csr,
+)
+
+
+def _with_data(m: CSRMatrix, data: np.ndarray) -> CSRMatrix:
+    return CSRMatrix(
+        n_rows=m.n_rows, n_cols=m.n_cols, indptr=m.indptr,
+        indices=m.indices, data=data,
+    )
+
+
+# --------------------------------------------------------------- registry
+@pytest.mark.parametrize("strategy", available_strategies())
+def test_registry_round_trip_valid_schedule(strategy, er_matrix):
+    dag = dag_from_lower_csr(er_matrix)
+    s = schedule(dag, 4, strategy=strategy)
+    check_validity(dag, s)
+
+
+def test_registry_unknown_strategy_raises():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        get_scheduler("nope")
+
+
+def test_registry_options_flow_through(nb_matrix):
+    dag = dag_from_lower_csr(nb_matrix)
+    o = ScheduleOptions(k=3, n_blocks=2)
+    s = schedule(dag, options=o, strategy="block")
+    check_validity(dag, s)
+    assert s.k == 3
+
+
+def test_register_scheduler_and_duplicate_rejection():
+    calls = []
+
+    @register_scheduler("test-counting")
+    def _counting(dag, o):
+        calls.append(dag.n)
+        return grow_local(dag, o.k)
+
+    try:
+        L = erdos_renyi_lower(80, 0.05, seed=0)
+        dag = dag_from_lower_csr(L)
+        check_validity(dag, schedule(dag, 2, strategy="test-counting"))
+        assert calls == [80]
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("test-counting")(lambda d, o: None)
+    finally:
+        from repro.pipeline import registry
+
+        registry._REGISTRY.pop("test-counting", None)
+
+
+# ------------------------------------------------------------- plan cache
+def test_cache_hit_skips_scheduling(er_matrix):
+    sched_calls = []
+
+    @register_scheduler("test-spy")
+    def _spy(dag, o):
+        sched_calls.append(1)
+        return grow_local(dag, o.k)
+
+    try:
+        cache = PlanCache()
+        b = np.random.default_rng(0).standard_normal(er_matrix.n_rows)
+        s1 = TriangularSolver.plan(er_matrix, strategy="test-spy", k=4,
+                                   cache=cache)
+        x1 = np.asarray(s1.solve(b))
+        s2 = TriangularSolver.plan(er_matrix, strategy="test-spy", k=4,
+                                   cache=cache)
+        x2 = np.asarray(s2.solve(b))
+        # the second plan on the same sparsity pattern never re-scheduled,
+        # and identical values mean no numeric refresh either
+        assert len(sched_calls) == 1
+        assert cache.stats.hits == 1 and cache.stats.misses == 1
+        assert cache.stats.numeric_updates == 0
+        assert s2 is s1
+        np.testing.assert_allclose(x1, x2, rtol=1e-6)
+        ref = solve_lower_scipy(er_matrix, b)
+        assert np.abs(x1 - ref).max() / np.abs(ref).max() < 1e-4
+    finally:
+        from repro.pipeline import registry
+
+        registry._REGISTRY.pop("test-spy", None)
+
+
+def test_cache_key_separates_configs(er_matrix, nb_matrix):
+    cache = PlanCache()
+    TriangularSolver.plan(er_matrix, k=4, cache=cache)
+    TriangularSolver.plan(er_matrix, k=8, cache=cache)  # different k
+    TriangularSolver.plan(nb_matrix, k=4, cache=cache)  # different pattern
+    TriangularSolver.plan(er_matrix, k=4, strategy="hdagg", cache=cache)
+    # scheduling options beyond k/strategy must separate entries too
+    TriangularSolver.plan(er_matrix, k=4, strategy="block", n_blocks=2,
+                          cache=cache)
+    TriangularSolver.plan(er_matrix, k=4, strategy="block", n_blocks=3,
+                          cache=cache)
+    assert cache.stats.misses == 6 and cache.stats.hits == 0
+    TriangularSolver.plan(er_matrix, k=4, cache=cache)
+    assert cache.stats.hits == 1
+
+
+def test_cache_hit_refreshes_values(er_matrix):
+    """Same pattern, new values: the hit must solve with the NEW numbers,
+    WITHOUT corrupting solvers handed out earlier."""
+    cache = PlanCache()
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal(er_matrix.n_rows)
+    s1 = TriangularSolver.plan(er_matrix, k=4, cache=cache)
+    scaled = _with_data(
+        er_matrix, er_matrix.data * (1.0 + rng.uniform(0.1, 1.0, er_matrix.nnz))
+    )
+    solver = TriangularSolver.plan(scaled, k=4, cache=cache)
+    assert cache.stats.hits == 1 and cache.stats.numeric_updates == 1
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(scaled, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-4
+    # the earlier solver still solves with the OLD values
+    x1 = np.asarray(s1.solve(b))
+    ref1 = solve_lower_scipy(er_matrix, b)
+    assert np.abs(x1 - ref1).max() / np.abs(ref1).max() < 1e-4
+    # the clone became canonical: planning the scaled values again is free
+    s3 = TriangularSolver.plan(scaled, k=4, cache=cache)
+    assert s3 is solver and cache.stats.numeric_updates == 1
+
+
+def test_numeric_update_without_cache(nb_matrix):
+    rng = np.random.default_rng(2)
+    b = rng.standard_normal(nb_matrix.n_rows)
+    solver = TriangularSolver.plan(nb_matrix, k=4)
+    scaled = _with_data(nb_matrix, nb_matrix.data * 3.0)
+    solver.numeric_update(scaled)
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(scaled, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_numeric_update_rejects_other_pattern(er_matrix, nb_matrix):
+    solver = TriangularSolver.plan(er_matrix, k=2)
+    with pytest.raises(ValueError, match="fingerprint"):
+        solver.numeric_update(nb_matrix)
+
+
+def test_cache_eviction():
+    cache = PlanCache(maxsize=1)
+    a = erdos_renyi_lower(60, 0.05, seed=1)
+    b = erdos_renyi_lower(60, 0.05, seed=2)
+    TriangularSolver.plan(a, k=2, cache=cache)
+    TriangularSolver.plan(b, k=2, cache=cache)
+    TriangularSolver.plan(a, k=2, cache=cache)  # evicted -> rebuilt
+    assert cache.stats.misses == 3 and cache.stats.evictions == 2
+
+
+# -------------------------------------------------- upper solves / pairs
+def test_upper_solve_matches_scipy(ichol_matrix):
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    from scipy.sparse.linalg import spsolve_triangular
+
+    U = transpose_csr(ichol_matrix)
+    solver = TriangularSolver.plan(U, lower=False, k=4)
+    b = np.random.default_rng(3).standard_normal(U.n_rows)
+    x = np.asarray(solver.solve(b))
+    ref = spsolve_triangular(
+        scipy_sparse.csr_matrix(U.to_scipy()), b, lower=False
+    )
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_lower_flag_validates_triangularity(ichol_matrix):
+    U = transpose_csr(ichol_matrix)
+    with pytest.raises(AssertionError):
+        TriangularSolver.plan(U, lower=True)
+    with pytest.raises(AssertionError):
+        TriangularSolver.plan(ichol_matrix, lower=False)
+
+
+def test_factor_pair_applies_normal_equations(ichol_matrix):
+    fwd, bwd = factor_pair(ichol_matrix, k=4)
+    rng = np.random.default_rng(4)
+    b = rng.standard_normal(ichol_matrix.n_rows)
+    z = np.asarray(bwd(fwd(b)))
+    Ls = ichol_matrix.to_scipy()
+    ref = np.linalg.solve((Ls @ Ls.T).toarray(), b)
+    assert np.abs(z - ref).max() / np.abs(ref).max() < 1e-3
+
+
+# ------------------------------------------------------- batched multi-RHS
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+def test_multi_rhs_matches_column_solves(backend, nb_matrix):
+    solver = TriangularSolver.plan(
+        nb_matrix, k=4, backend=backend, steps_per_tile=4, interpret=True
+    )
+    B = np.random.default_rng(5).standard_normal((nb_matrix.n_rows, 5))
+    X = np.asarray(solver.solve(B.astype(np.float32)))
+    assert X.shape == B.shape
+    for j in range(B.shape[1]):
+        xj = np.asarray(solver.solve(B[:, j].astype(np.float32)))
+        # batched and single-RHS einsums reduce in different orders -> f32
+        # rounding differences scale with |x|
+        scale = np.abs(xj).max()
+        np.testing.assert_allclose(X[:, j] / scale, xj / scale, atol=1e-5)
+        ref = solve_lower_scipy(nb_matrix, B[:, j])
+        assert np.abs(X[:, j] - ref).max() / np.abs(ref).max() < 1e-4
+
+
+def test_multi_rhs_upper(ichol_matrix):
+    U = transpose_csr(ichol_matrix)
+    solver = TriangularSolver.plan(U, lower=False, k=4)
+    B = np.random.default_rng(6).standard_normal((U.n_rows, 3))
+    X = np.asarray(solver.solve(B.astype(np.float32)))
+    for j in range(B.shape[1]):
+        xj = np.asarray(solver.solve(B[:, j].astype(np.float32)))
+        scale = np.abs(xj).max()
+        np.testing.assert_allclose(X[:, j] / scale, xj / scale, atol=1e-5)

@@ -2,7 +2,7 @@
 block concatenation, reordering, and hypothesis-driven random DAGs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import (
     apply_reordering,

@@ -2,7 +2,7 @@
 plus the PCG end-to-end driver."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import apply_reordering, compile_plan, grow_local, hdagg_schedule
 from repro.solver import (

@@ -3,7 +3,7 @@ sweep, interpret mode)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.kernels.ref import spmv_block_ref
 from repro.kernels.spmv import ell_from_csr, spmv, spmv_pallas
