@@ -73,6 +73,10 @@ def dataset(name: str):
             f"NB_p{p:g}_b{b:g}": narrow_band_lower(N_SCALE, p, b, seed=i)
             for i, (p, b) in enumerate(((0.14, 10), (0.05, 20), (0.03, 42)))
         }
+    elif name == "corpus":  # autotuner scenario corpus (repro.autotune)
+        from repro.autotune import corpus_entries
+
+        mats = {e.name: e.matrix() for e in corpus_entries()}
     else:
         raise ValueError(name)
     return list(mats.items())

@@ -18,6 +18,7 @@ TABLES = {
     "t76": ("table76_scaling", "Table 7.5 core scaling"),
     "t77": ("table77_amortization", "Table 7.6 amortization threshold"),
     "t78": ("table78_blocks", "Table 7.7 block-parallel scheduling"),
+    "t7x": ("table7x_auto", "Auto-strategy vs best/worst fixed (corpus)"),
     "roofline": ("kernel_roofline", "Kernel roofline"),
 }
 

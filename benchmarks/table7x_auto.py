@@ -1,0 +1,84 @@
+"""Auto-strategy shootout — ``strategy="auto"`` vs best/worst fixed.
+
+For every matrix in the autotuner's scenario corpus (``repro.autotune``):
+
+  * model view — BSP cost (§2.2) of the auto-selected config vs the best
+    and worst of the 7 fixed registry strategies at default options. The
+    acceptance bar (asserted in tests/test_autotune.py, reported here):
+    auto <= 1.1 * best and auto < worst on every corpus matrix;
+  * measured view — wall-clock of an actual solve with the auto plan vs
+    the best-fixed and worst-fixed plans (scan executor, k=8).
+
+Also prints which strategy auto picked and the regime label it derived,
+so a selector regression is visible at a glance.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    K_CORES,
+    bsp_cost,
+    dag_from_lower_csr,
+    dataset,
+    geomean,
+    solver_for,
+    time_callable,
+)
+from repro.autotune import corpus_entry
+from repro.pipeline import PlanCache, TriangularSolver, available_strategies, schedule
+
+
+def run(csv_rows):
+    print("# Table 7.x — strategy='auto' vs fixed strategies (corpus)")
+    print(
+        f"{'matrix':16s} {'regime':7s} {'auto->':10s} "
+        f"{'cost a/b/w':>20s} {'vs best':>8s} {'vs worst':>9s} "
+        f"{'wall a/b/w (us)':>22s}"
+    )
+    ratios_best, ratios_worst, wall_ratios = [], [], []
+    cache = PlanCache()
+    for mname, L in dataset("corpus"):
+        entry = corpus_entry(mname)
+        dag = dag_from_lower_csr(L)
+        costs = {
+            s: bsp_cost(dag, schedule(dag, K_CORES, strategy=s))
+            for s in available_strategies()
+        }
+        best = min(costs, key=costs.get)
+        worst = max(costs, key=costs.get)
+
+        auto = TriangularSolver.plan(L, strategy="auto", k=K_CORES, cache=cache)
+        sel = auto.selection
+        a_cost = sel.cost
+
+        def timed(strategy):
+            solve, b, _ = solver_for(L, strategy=strategy, cache=cache)
+            return time_callable(lambda: solve(b).block_until_ready())
+
+        t_auto = timed("auto")
+        t_best = timed(best)
+        t_worst = timed(worst)
+
+        rb, rw = a_cost / costs[best], a_cost / costs[worst]
+        ratios_best.append(rb)
+        ratios_worst.append(rw)
+        wall_ratios.append(t_auto / t_best)
+        print(
+            f"{mname:16s} {sel.regime:7s} {sel.strategy:10s} "
+            f"{a_cost:8.0f}/{costs[best]:5.0f}/{costs[worst]:6.0f} "
+            f"{rb:7.2f}x {rw:8.2f}x "
+            f"{t_auto*1e6:7.0f}/{t_best*1e6:6.0f}/{t_worst*1e6:7.0f}"
+        )
+        csv_rows.append((f"t7x.{mname}.auto", round(t_auto * 1e6, 1), round(rb, 3)))
+        csv_rows.append((f"t7x.{mname}.best_{best}", round(t_best * 1e6, 1), 1.0))
+        csv_rows.append(
+            (f"t7x.{mname}.worst_{worst}", round(t_worst * 1e6, 1), round(1 / rw, 3))
+        )
+    print(
+        f"geomean: auto/best cost {geomean(ratios_best):.3f}x, "
+        f"auto/worst cost {geomean(ratios_worst):.3f}x, "
+        f"auto/best wall {geomean(wall_ratios):.2f}x"
+    )
+    print(
+        f"selector overhead amortized: {cache.stats.selections} selections, "
+        f"{cache.stats.selection_hits} selection hits"
+    )

@@ -31,15 +31,18 @@ x0, it0, rr0 = cg_solve(A, rhs[0], tol=1e-6, maxiter=4000)
 t_plain = time.time() - t0
 print(f"plain CG      : {it0:4d} iterations, relres {rr0:.1e}, {t_plain:.2f}s")
 
+# strategy defaults to "auto": the autotuner picks per factor (the L and
+# L^T solves see mirror-image DAGs and are selected independently)
 cache = PlanCache()
 t0 = time.time()
 x1, it1, rr1, info = pcg_ichol(A, rhs[0], k=8, tol=1e-6, maxiter=4000,
                                cache=cache)
 t_pcg_first = time.time() - t0
-print(f"GrowLocal PCG : {it1:4d} iterations, relres {rr1:.1e}, "
-      f"{t_pcg_first:.2f}s (includes one-time inspector)")
-print(f"  schedules: fwd {info['fwd_supersteps']} / bwd "
-      f"{info['bwd_supersteps']} supersteps")
+print(f"auto PCG      : {it1:4d} iterations, relres {rr1:.1e}, "
+      f"{t_pcg_first:.2f}s (includes one-time inspector + selection)")
+print(f"  schedules: fwd {info['fwd_strategy']} "
+      f"({info['fwd_supersteps']} supersteps) / bwd {info['bwd_strategy']} "
+      f"({info['bwd_supersteps']} supersteps)")
 assert it1 < it0
 np.testing.assert_allclose(x1, x0, rtol=2e-2, atol=2e-3)
 

@@ -55,4 +55,23 @@ print(f"multi-RHS: solved {B.shape[1]} systems in one traversal")
 TriangularSolver.plan(L, strategy="growlocal", k=8, cache=cache)
 print(f"cache: {cache.stats.as_dict()}")
 assert cache.stats.hits == 1
+
+# 7. or skip choosing altogether: strategy="auto" extracts DAG features,
+#    shortlists candidate configs by regime and scores them with the §2.2
+#    cost model — the whole selection is memoized per sparsity pattern
+#    (fresh cache here so the auto-built solver, not the step-3 entry,
+#    is what comes back — `selection` records how a solver was built)
+auto_cache = PlanCache()
+auto = TriangularSolver.plan(L, strategy="auto", k=8, cache=auto_cache)
+sel = auto.selection
+print(f"auto: regime={sel.regime!r} picked {sel.strategy!r} from "
+      f"{[(s, round(c)) for s, c in sel.as_dict()['candidates']]}")
+x_auto = np.asarray(auto.solve(b))
+assert np.abs(x_auto - x_ref).max() / np.abs(x_ref).max() < 1e-3
+best_cand = min(c for _, c in sel.as_dict()["candidates"])
+assert sel.cost <= best_cand  # the winner is the argmin of the shortlist
+# replanning is free: the selection memo + plan cache absorb everything
+TriangularSolver.plan(L, strategy="auto", k=8, cache=auto_cache)
+assert auto_cache.stats.selections == 1
+assert auto_cache.stats.selection_hits == 1
 print("OK")

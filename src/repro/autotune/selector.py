@@ -1,0 +1,344 @@
+"""Layer 2 of the autotuner: transparent, feature-driven strategy selection.
+
+Two stages, both inspectable:
+
+1.  ``classify`` maps the DAG features to a *regime* label, and
+    ``shortlist`` maps the regime to 2–3 candidate
+    ``(strategy, ScheduleOptions)`` configs. The rules are a small,
+    documented table calibrated on the scenario corpus
+    (``autotune.corpus``; thresholds re-checked by
+    ``tests/test_autotune.py``):
+
+      regime     trigger (features f, cores k)            candidates
+      ---------  ----------------------------------------  ----------------
+      serial     f.avg_wavefront < 2  or  f.n <= 64        serial, growlocal
+      wide       f.depth <= 8  or  f.avg_wavefront >= 8k   hdagg, growlocal,
+                                                           serial
+      banded     f.mean_band <= 0.1 * f.n                  growlocal, serial,
+                                                           funnel-gl
+      mixed      everything else                           growlocal,
+                                                           funnel-gl, serial
+
+    Rationale: chain-like DAGs cannot amortize a single barrier (§2.2's L
+    dwarfs the work), so serial wins; shallow-wide DAGs are the one place
+    level-set schedulers (HDagg) beat GrowLocal because every level is
+    wide enough to balance; locality-friendly banded/FEM DAGs are
+    GrowLocal/Funnel territory (the paper's headline regime); the funnel
+    coarsening only pays off when there is depth to collapse.
+
+2.  ``select_schedule`` runs every shortlisted candidate and scores it
+    with the exact §2.2 objective ``bsp_cost(dag, s, L)`` — the model the
+    schedulers themselves optimize — keeping the first minimum
+    (deterministic: the shortlist order is the tie-break).
+
+``resolve_auto`` wraps this for ``TriangularSolver.plan(strategy="auto")``
+and memoizes the outcome per (sparsity fingerprint, options, orientation)
+— in the passed ``PlanCache`` when there is one (so refactorizations skip
+selection entirely and resolve straight to a concrete plan-cache key),
+else in a module-level table. With ``tune=True`` it additionally *times*
+the shortlisted compiled plans on the real backend (measured trials, like
+"Elasticity in Parallel Sparse Triangular Solve" adapts execution mode to
+the instance) and lets wall-clock override the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.autotune.features import MatrixFeatures, dag_features, matrix_features
+from repro.core import Schedule, bsp_cost
+from repro.pipeline.registry import ScheduleOptions, get_scheduler
+from repro.sparse.csr import CSRMatrix, pattern_fingerprint
+from repro.sparse.dag import SolveDAG, dag_from_lower_csr
+
+REGIMES = ("serial", "wide", "banded", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One shortlisted config; ``cost`` is filled in once scored."""
+
+    strategy: str
+    options: ScheduleOptions
+    cost: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Outcome of one auto-selection — the winner plus the full scored
+    shortlist, so callers can audit why a strategy was chosen."""
+
+    strategy: str
+    options: ScheduleOptions
+    cost: float  # bsp_cost of the winner (model units)
+    regime: str
+    features: MatrixFeatures
+    candidates: Tuple[Candidate, ...]  # scored, in shortlist order
+    tuned: bool = False
+    # (strategy, median solve seconds) per candidate when tune=True
+    timings: Optional[Tuple[Tuple[str, float], ...]] = None
+
+    def as_dict(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "regime": self.regime,
+            "cost": self.cost,
+            "candidates": [(c.strategy, c.cost) for c in self.candidates],
+            "tuned": self.tuned,
+            "timings": None if self.timings is None else list(self.timings),
+        }
+
+
+def classify(f: MatrixFeatures, k: int = 8) -> str:
+    """Map features to a regime label (see module docstring table)."""
+    if f.avg_wavefront < 2.0 or f.n <= 64:
+        return "serial"
+    if f.depth <= 8 or f.avg_wavefront >= 8 * max(k, 1):
+        return "wide"
+    if f.mean_band <= 0.1 * f.n:
+        return "banded"
+    return "mixed"
+
+
+_SHORTLISTS: Dict[str, Tuple[str, ...]] = {
+    "serial": ("serial", "growlocal"),
+    "wide": ("hdagg", "growlocal", "serial"),
+    "banded": ("growlocal", "serial", "funnel-gl"),
+    "mixed": ("growlocal", "funnel-gl", "serial"),
+}
+
+
+def shortlist(
+    f: MatrixFeatures, options: Optional[ScheduleOptions] = None
+) -> Tuple[Candidate, ...]:
+    """2–3 candidate configs for these features, in tie-break order.
+    Strategy-specific knobs are adapted from the features where it is
+    known to matter: the funnel coarsening cap tracks the average
+    wavefront so funnels span whole levels (§4)."""
+    o = options or ScheduleOptions()
+    out = []
+    for name in _SHORTLISTS[classify(f, o.k)]:
+        oc = o
+        if name == "funnel-gl" and o.max_size == ScheduleOptions.max_size:
+            # cap funnels near the average level width: big enough to
+            # collapse whole wavefronts, small enough to keep k busy —
+            # but only when the caller left max_size at its default (an
+            # explicitly passed knob is respected as-is)
+            oc = o.replace(
+                max_size=int(np.clip(2 * f.avg_wavefront, 16, 256))
+            )
+        out.append(Candidate(strategy=name, options=oc))
+    return tuple(out)
+
+
+def select_schedule(
+    dag: SolveDAG,
+    options: Optional[ScheduleOptions] = None,
+    *,
+    features: Optional[MatrixFeatures] = None,
+) -> Tuple[Selection, Schedule]:
+    """Pick a strategy for ``dag``: classify -> shortlist -> score every
+    candidate with ``bsp_cost`` -> first minimum wins. Returns the
+    audit-friendly ``Selection`` together with the winning schedule (so
+    ``schedule(dag, strategy="auto")`` costs nothing extra)."""
+    o = options or ScheduleOptions()
+    f = features if features is not None else dag_features(dag)
+    best = None  # (cost, candidate, schedule)
+    scored = []
+    for c in shortlist(f, o):
+        s = get_scheduler(c.strategy)(dag, c.options)
+        cost = bsp_cost(dag, s, L=c.options.L)
+        scored.append(dataclasses.replace(c, cost=cost))
+        if best is None or cost < best[0]:
+            best = (cost, scored[-1], s)
+    cost, c, s = best
+    sel = Selection(
+        strategy=c.strategy,
+        options=c.options,
+        cost=cost,
+        regime=classify(f, o.k),
+        features=f,
+        candidates=tuple(scored),
+    )
+    return sel, s
+
+
+# ------------------------------------------------------------ plan() hook
+# Fallback memo for cache-less plans. Unlike a PlanCache's selection dict
+# (tiny, scoped to the cache's lifetime) this table is process-global, so
+# it is FIFO-capped: a serving loop streaming distinct patterns through
+# cache=None must not grow it forever.
+_MEMO_LOCK = threading.Lock()
+_MEMO_MAX = 4096
+_SELECTION_MEMO: Dict[tuple, Selection] = {}
+
+
+def _memo_store(key: tuple, sel: Selection) -> None:
+    with _MEMO_LOCK:
+        while len(_SELECTION_MEMO) >= _MEMO_MAX:
+            _SELECTION_MEMO.pop(next(iter(_SELECTION_MEMO)))
+        _SELECTION_MEMO[key] = sel
+
+
+def clear_selection_memo() -> None:
+    with _MEMO_LOCK:
+        _SELECTION_MEMO.clear()
+
+
+def _binding_key(plan_kwargs: Optional[dict]) -> tuple:
+    """The plan_kwargs that influence measured-trial timings (tune=True):
+    two bindings that compile differently must not share a tuned pick.
+    Delegates to the same ``binding_fingerprint`` that keys the plan
+    cache, so the two identities can never drift apart."""
+    from repro.pipeline.solver import binding_fingerprint
+
+    pk = plan_kwargs or {}
+    return binding_fingerprint(
+        backend=pk.get("backend", "scan"),
+        dtype=pk.get("dtype", np.float32),
+        width=pk.get("width"),
+        steps_per_tile=pk.get("steps_per_tile", 8),
+        interpret=pk.get("interpret"),
+        mesh=pk.get("mesh"),
+    )
+
+
+def selection_key(
+    fp: str, options: ScheduleOptions, lower: bool, tune: bool,
+    binding: Optional[tuple] = None,
+) -> tuple:
+    """Memo key for one auto-selection. ``binding`` (see ``_binding_key``)
+    only matters for measured trials; the model-based path is binding-free.
+    """
+    return (fp, options, lower, tune, binding if tune else None)
+
+
+def resolve_auto(
+    a: CSRMatrix,
+    *,
+    options: ScheduleOptions,
+    lower: bool = True,
+    tune: bool = False,
+    cache=None,
+    fp: Optional[str] = None,
+    plan_kwargs: Optional[dict] = None,
+) -> Selection:
+    """Resolve ``strategy="auto"`` for matrix ``a`` to a concrete
+    ``Selection``, memoized per sparsity fingerprint — in ``cache`` (a
+    ``PlanCache``) when given, else module-level. On a memo hit nothing
+    is recomputed: the caller goes straight to a concrete plan-cache key.
+    """
+    sel, _, _ = resolve_auto_full(
+        a, options=options, lower=lower, tune=tune, cache=cache, fp=fp,
+        plan_kwargs=plan_kwargs,
+    )
+    return sel
+
+
+def resolve_auto_full(
+    a: CSRMatrix,
+    *,
+    options: ScheduleOptions,
+    lower: bool = True,
+    tune: bool = False,
+    cache=None,
+    fp: Optional[str] = None,
+    plan_kwargs: Optional[dict] = None,
+) -> Tuple[Selection, Optional[Schedule], Optional[object]]:
+    """``resolve_auto`` plus two cold-path artifacts for ``plan()``:
+
+    * the winner's already-computed ``Schedule`` when the model-based
+      selection ran fresh (skips re-running the winning scheduler), or
+    * the winner's fully-built trial *solver* when ``tune=True`` ran
+      measured trials (skips recompiling the winner).
+
+    Both are None on a memo hit — the caller's plan cache already has, or
+    will rebuild, the concrete plan."""
+    fp = fp if fp is not None else pattern_fingerprint(a)
+    key = selection_key(fp, options, lower, tune, _binding_key(plan_kwargs))
+    if cache is not None:
+        sel = cache.get_selection(key)
+    else:
+        with _MEMO_LOCK:
+            sel = _SELECTION_MEMO.get(key)
+    if sel is not None:
+        return sel, None, None
+
+    # the same mirror step plan() uses, so the features and candidate
+    # costs describe the DAG that will actually be scheduled
+    from repro.pipeline.solver import mirror_to_lower
+
+    m0, _ = mirror_to_lower(a, lower)
+    dag = dag_from_lower_csr(m0)
+    f = matrix_features(m0, dag=dag)
+    sel, winning_sched = select_schedule(dag, options, features=f)
+    winner_solver = None
+    if tune:
+        sel, winner_solver = _timed_refine(
+            a, sel, lower=lower, plan_kwargs=plan_kwargs
+        )
+        winning_sched = None
+
+    if cache is not None:
+        cache.store_selection(key, sel)
+    else:
+        _memo_store(key, sel)
+    return sel, winning_sched, winner_solver
+
+
+def _timed_refine(
+    a: CSRMatrix,
+    sel: Selection,
+    *,
+    lower: bool,
+    plan_kwargs: Optional[dict],
+    reps: int = 3,
+) -> Tuple[Selection, object]:
+    """Measured-trial mode: compile every shortlisted candidate through
+    the real pipeline and let the median wall-clock of an actual solve
+    pick the winner. Trials run against a PRIVATE plan cache — losing
+    plans never pollute (or evict hot entries from) the caller's cache,
+    and the winner solver is still private when the tuned Selection is
+    recorded on it, so no published object is ever mutated. The winner is
+    returned for ``plan()`` to insert under its concrete key."""
+    import time
+
+    from repro.pipeline.cache import PlanCache
+    from repro.pipeline.solver import TriangularSolver
+
+    kw = dict(plan_kwargs or {})
+    kw.pop("strategy", None)
+    kw.pop("options", None)
+    kw["cache"] = PlanCache()  # private to this selection
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.n_rows)
+    timings = []
+    trial = {}  # strategy -> solver
+    for c in sel.candidates:
+        solver = TriangularSolver.plan(
+            a, strategy=c.strategy, options=c.options, lower=lower, **kw
+        )
+        trial[c.strategy] = solver
+        solver.solve(b)  # compile + warm up
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            np.asarray(solver.solve(b))
+            ts.append(time.perf_counter() - t0)
+        timings.append((c.strategy, float(np.median(ts))))
+    t_of = dict(timings)
+    winner = min(sel.candidates, key=lambda c: t_of[c.strategy])
+    tuned = dataclasses.replace(
+        sel,
+        strategy=winner.strategy,
+        options=winner.options,
+        cost=winner.cost,
+        tuned=True,
+        timings=tuple(timings),
+    )
+    winner_solver = trial[winner.strategy]
+    winner_solver._selection = tuned  # still private — safe to record
+    return tuned, winner_solver

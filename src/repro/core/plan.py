@@ -44,8 +44,8 @@ class ExecPlan:
                                   sums (row split over multiple steps)
     step_bounds int32[S+1]     — superstep s covers steps
                                   [step_bounds[s], step_bounds[s+1])
-    val_src   int64[T, k, W]   — index into L.data feeding vals (-1 padding)
-    diag_src  int64[T, k]      — index into L.data feeding diag (-1 padding)
+    val_src   int32[T, k, W]   — index into L.data feeding vals (-1 padding)
+    diag_src  int32[T, k]      — index into L.data feeding diag (-1 padding)
 
     ``val_src``/``diag_src`` let a caller refresh the numeric values for a
     new matrix with the *same* sparsity pattern without recompiling — the
@@ -149,8 +149,10 @@ def compile_plan(
     vals = np.zeros((T, k, W), dtype=dtype)
     diag = np.ones((T, k), dtype=dtype)
     accum = np.zeros((T, k), dtype=bool)
-    val_src = np.full((T, k, W), -1, dtype=np.int64)
-    diag_src = np.full((T, k), -1, dtype=np.int64)
+    # int32 matches col_idx and halves the host-side footprint; entry ids
+    # are bounded by nnz << 2^31
+    val_src = np.full((T, k, W), -1, dtype=np.int32)
+    diag_src = np.full((T, k), -1, dtype=np.int32)
     # padding gathers read x[n] (scratch) -> harmless 0 contribution
     col_idx[:] = n
 

@@ -8,6 +8,13 @@ want to swap them per call. Each registered strategy is a callable
 
 and ``schedule(dag, k, strategy=..., **opts)`` is the public entry point.
 Third-party strategies can join via ``@register_scheduler("name")``.
+
+``strategy="auto"`` is a *meta*-strategy, not a registry entry: it asks
+the autotuner (``repro.autotune``) to pick among the registered strategies
+by DAG features + the §2.2 cost model. It is accepted by ``schedule`` and
+``TriangularSolver.plan`` but deliberately absent from
+``available_strategies()`` — everything listed there is a concrete
+schedule an auto-selection can resolve *to*.
 """
 from __future__ import annotations
 
@@ -56,6 +63,10 @@ def register_scheduler(name: str):
 
     def deco(fn: SchedulerFn) -> SchedulerFn:
         key = name.lower()
+        if key == "auto":
+            raise ValueError(
+                "'auto' is reserved for the autotuner meta-strategy"
+            )
         if key in _REGISTRY:
             raise ValueError(f"scheduler {name!r} already registered")
         _REGISTRY[key] = fn
@@ -68,6 +79,12 @@ def get_scheduler(name: str) -> SchedulerFn:
     try:
         return _REGISTRY[name.lower()]
     except KeyError:
+        if name.lower() == "auto":
+            raise KeyError(
+                "'auto' is a meta-strategy with no registry entry; call "
+                "schedule(dag, strategy='auto') or "
+                "TriangularSolver.plan(a, strategy='auto') instead"
+            ) from None
         raise KeyError(
             f"unknown strategy {name!r}; available: {available_strategies()}"
         ) from None
@@ -85,12 +102,18 @@ def schedule(
     options: ScheduleOptions | None = None,
     **opts,
 ) -> Schedule:
-    """Run a registered strategy. ``k``/keyword opts override ``options``."""
+    """Run a registered strategy (or ``"auto"`` — the autotuner picks one
+    by DAG features). ``k``/keyword opts override ``options``."""
+    strategy = strategy.lower()
     o = options or ScheduleOptions()
     if k is not None:
         o = o.replace(k=k)
     if opts:
         o = o.replace(**opts)
+    if strategy == "auto":
+        from repro.autotune.selector import select_schedule
+
+        return select_schedule(dag, o)[1]
     return get_scheduler(strategy)(dag, o)
 
 

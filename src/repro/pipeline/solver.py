@@ -43,6 +43,55 @@ from repro.sparse.dag import dag_from_lower_csr
 BACKENDS = ("scan", "pallas", "distributed")
 
 
+def mesh_fingerprint(mesh) -> tuple | None:
+    """Structural mesh identity for cache keys (axes + device list) —
+    not ``id()``: CPython reuses freed ids (a dead mesh's id can alias a
+    new, different mesh), and a rebuilt identical Mesh should hit the
+    same entry. Shared with the autotuner's tune-memo binding key."""
+    if mesh is None:
+        return None
+    return (
+        tuple(sorted(mesh.shape.items())),
+        tuple(str(d) for d in np.asarray(mesh.devices).ravel()),
+    )
+
+
+def binding_fingerprint(
+    *, backend, dtype, width, steps_per_tile, interpret, mesh
+) -> tuple:
+    """The backend-binding part of a plan's identity — everything beyond
+    (pattern, strategy, options, orientation) that changes the compiled
+    solver. One helper shared by ``plan()``'s cache key and the
+    autotuner's tune-memo key so the two can never drift apart."""
+    return (
+        backend,
+        np.dtype(dtype).str,
+        width if width is not None else "auto",
+        steps_per_tile,
+        interpret,
+        mesh_fingerprint(mesh),
+    )
+
+
+def mirror_to_lower(a: CSRMatrix, lower: bool):
+    """``(m0, outer)``: the lower-triangular matrix the schedulers actually
+    see, plus the outer reverse permutation (None when ``lower=True``).
+    Reversed symmetrically, an upper-triangular matrix is lower triangular
+    again (the L^T trick, paper §5 footnote). Shared by ``plan()`` and the
+    autotuner's ``resolve_auto`` so feature extraction and candidate
+    scoring always describe the DAG that is actually scheduled."""
+    # ValueError, not assert: a wrongly-oriented matrix planned under
+    # python -O would otherwise produce silently-garbage solutions
+    if lower:
+        if not a.is_lower_triangular():
+            raise ValueError("expected a lower-triangular matrix")
+        return a, None
+    if not bool(np.all(a.indices >= a.row_of_entry())):
+        raise ValueError("lower=False expects an upper-triangular matrix")
+    outer = np.arange(a.n_rows, dtype=np.int64)[::-1].copy()
+    return permute_symmetric(a, outer), outer
+
+
 def _entry_permutation(m: CSRMatrix, perm: np.ndarray) -> np.ndarray:
     """``e`` such that ``permute_symmetric(m, perm).data == m.data[e]``.
 
@@ -89,6 +138,7 @@ class TriangularSolver:
         self._steps_per_tile = steps_per_tile
         self._interpret = interpret
         self._source_data: Optional[np.ndarray] = None  # set by plan()
+        self._selection = None  # autotune Selection, set by plan(auto)
         total_inv = np.empty_like(total_perm)
         total_inv[total_perm] = np.arange(len(total_perm))
         self._perm = jnp.asarray(total_perm, jnp.int32)
@@ -226,7 +276,7 @@ class TriangularSolver:
         return self.exec_plan.n_supersteps
 
     def info(self) -> dict:
-        return {
+        out = {
             "strategy": self.strategy,
             "backend": self.backend,
             "lower": self.lower,
@@ -234,6 +284,20 @@ class TriangularSolver:
             "inspector_seconds": self.inspector_seconds,
             "plan": self.exec_plan.stats(),
         }
+        if self._selection is not None:
+            out["selection"] = self._selection.as_dict()
+        return out
+
+    @property
+    def selection(self):
+        """The autotuner's ``Selection`` recorded when this solver object
+        was *built* by a ``strategy="auto"`` plan (None when it was built
+        with a fixed strategy). Cached solvers are never mutated after the
+        fact: an auto plan that cache-hits an entry originally built by a
+        fixed-strategy plan returns it with ``selection`` still None — the
+        resolved outcome remains available via the cache's selection memo.
+        """
+        return self._selection
 
     # ---------------------------------------------------------- planning
     @classmethod
@@ -253,6 +317,7 @@ class TriangularSolver:
         steps_per_tile: int = 8,
         interpret: Optional[bool] = None,
         sched=None,
+        tune: bool = False,
         **opts,
     ) -> "TriangularSolver":
         """Plan a solver for triangular ``a`` (lower, or upper with
@@ -261,7 +326,25 @@ class TriangularSolver:
         values return a clone with refreshed numerics (solvers from earlier
         calls are never mutated). ``sched`` bypasses the registry with a
         pre-built Schedule (never cached — the cache cannot key on
-        arbitrary schedules)."""
+        arbitrary schedules).
+
+        ``strategy="auto"`` lets the autotuner choose: DAG features ->
+        rule-based shortlist -> §2.2 cost model (``repro.autotune``); with
+        ``tune=True`` the shortlisted plans are additionally compiled and
+        *timed* on the real backend. The resolved config is memoized per
+        sparsity fingerprint (inside ``cache`` when given), and the plan is
+        cached under the resolved *concrete* key — so repeated auto plans
+        on one pattern skip both selection and scheduling."""
+        # normalize once: the registry is case-insensitive, and the raw
+        # string enters the plan-cache key ("GrowLocal" vs "growlocal"
+        # must not schedule twice); also makes strategy="Auto" work
+        strategy = strategy.lower()
+        if tune and (strategy != "auto" or sched is not None):
+            raise ValueError(
+                "tune=True runs measured trials to refine an auto "
+                "selection; it requires strategy='auto' (and no pre-built "
+                "sched)"
+            )
         o = options or ScheduleOptions()
         if k is not None:
             o = o.replace(k=k)
@@ -269,42 +352,46 @@ class TriangularSolver:
             o = o.replace(**opts)
 
         fp = pattern_fingerprint(a)
+        selection = None
+        pre_sched = None  # winning Schedule the selector already computed
+        pre_solver = None  # winner's trial solver (tune=True measured run)
+        if strategy == "auto" and sched is None:
+            from repro.autotune.selector import resolve_auto_full
+
+            selection, pre_sched, pre_solver = resolve_auto_full(
+                a,
+                options=o,
+                lower=lower,
+                tune=tune,
+                cache=cache,
+                fp=fp,
+                plan_kwargs=dict(
+                    backend=backend, dtype=dtype, width=width,
+                    mesh=mesh, steps_per_tile=steps_per_tile,
+                    interpret=interpret,
+                ),
+            )
+            strategy, o = selection.strategy, selection.options
         # o (a frozen dataclass) covers every scheduling knob incl. k and
         # reorder; binding params (mesh identity, tile size, interpret) also
         # change the built solver and must key too.
-        key = (
-            fp,
-            strategy,
-            o,
-            width if width is not None else "auto",
-            np.dtype(dtype).str,
-            backend,
-            lower,
-            id(mesh) if mesh is not None else None,
-            steps_per_tile,
-            interpret,
+        key = (fp, strategy, o, lower) + binding_fingerprint(
+            backend=backend, dtype=dtype, width=width,
+            steps_per_tile=steps_per_tile, interpret=interpret, mesh=mesh,
         )
 
         def build() -> "TriangularSolver":
             t0 = time.perf_counter()
             n = a.n_rows
-            if lower:
-                assert a.is_lower_triangular(), "expected a lower-triangular matrix"
-                m0, outer = a, None
-            else:
-                assert bool(
-                    np.all(a.indices >= a.row_of_entry())
-                ), "lower=False expects an upper-triangular matrix"
-                # reversed symmetrically, an upper-triangular matrix is
-                # lower triangular again (the L^T trick, paper §5 footnote)
-                outer = np.arange(n, dtype=np.int64)[::-1].copy()
-                m0 = permute_symmetric(a, outer)
+            m0, outer = mirror_to_lower(a, lower)
 
-            if sched is None:
+            if sched is not None:
+                s = sched
+            elif pre_sched is not None:
+                s = pre_sched  # already computed while scoring candidates
+            else:
                 dag = dag_from_lower_csr(m0)
                 s = get_scheduler(strategy)(dag, o)
-            else:
-                s = sched
             if o.reorder:
                 m2, s2, _, r = apply_reordering(m0, s)
                 inner = r.perm
@@ -338,11 +425,19 @@ class TriangularSolver:
                 interpret=interpret,
             )
             solver._source_data = np.array(a.data)
+            # selection is recorded at build time only — cached solvers are
+            # never mutated after being handed out (see the property doc)
+            solver._selection = selection
             return solver
 
+        # the tuned winner was compiled+warmed during the measured trials
+        # (against a private cache) and carries its Selection — use it as
+        # the builder so the work is not redone; it enters the shared
+        # cache fully formed, so no published solver is ever mutated
+        builder = build if pre_solver is None else (lambda: pre_solver)
         if cache is None or sched is not None:
-            return build()
-        solver, hit = cache.get_or_build(key, build)
+            return builder()
+        solver, hit = cache.get_or_build(key, builder)
         if hit and not np.array_equal(solver._source_data, a.data):
             # same pattern, new values: clone with refreshed numerics (the
             # cached entry — and anyone holding it — stays untouched), then

@@ -79,7 +79,7 @@ def pcg_ichol(
     b: np.ndarray,
     *,
     k: int = 8,
-    strategy: str = "growlocal",
+    strategy: str = "auto",
     tol: float = 1e-6,
     maxiter: int = 1000,
     dtype=jnp.float32,
@@ -87,7 +87,10 @@ def pcg_ichol(
 ):
     """End-to-end driver: IC(0) + scheduled triangular solves as the CG
     preconditioner. Returns (x, iters, relres, info-dict). Pass a
-    ``PlanCache`` to reuse plans across calls on one sparsity pattern."""
+    ``PlanCache`` to reuse plans across calls on one sparsity pattern.
+    The default ``strategy="auto"`` lets the autotuner pick per factor
+    (``fwd`` and ``bwd`` solve mirror-image DAGs and are selected
+    independently); pass a registry name to pin it."""
     Lf = ichol0(a)
     fwd, bwd = factor_pair(Lf, strategy=strategy, k=k, dtype=dtype, cache=cache)
 
@@ -100,6 +103,8 @@ def pcg_ichol(
     info = {
         "fwd_supersteps": fwd.n_supersteps,
         "bwd_supersteps": bwd.n_supersteps,
+        "fwd_strategy": fwd.strategy,
+        "bwd_strategy": bwd.strategy,
         "fwd_plan": fwd.exec_plan.stats(),
         "bwd_plan": bwd.exec_plan.stats(),
     }

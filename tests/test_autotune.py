@@ -1,0 +1,257 @@
+"""Autotuner tests: feature extraction, regime classification, corpus
+acceptance (auto vs best/worst fixed by BSP cost), and hypothesis
+properties (reorder invariance, validity, deterministic selection)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.autotune import (
+    chain_lower,
+    classify,
+    clear_selection_memo,
+    corpus_entries,
+    dag_features,
+    independent_lower,
+    matrix_features,
+    resolve_auto,
+    select_schedule,
+    shortlist,
+    star_lower,
+)
+from repro.core import apply_reordering, bsp_cost, check_validity, grow_local
+from repro.pipeline import (
+    PlanCache,
+    ScheduleOptions,
+    TriangularSolver,
+    available_strategies,
+    schedule,
+)
+from repro.solver import solve_lower_scipy
+from repro.sparse import dag_from_lower_csr, erdos_renyi_lower
+
+
+# ----------------------------------------------------------------- features
+def test_features_of_known_shapes():
+    n = 50
+    chain = matrix_features(chain_lower(n))
+    assert chain.depth == n and chain.max_wavefront == 1
+    assert chain.avg_wavefront == 1.0 and chain.bandwidth == 1
+    star = matrix_features(star_lower(n))
+    assert star.depth == 2 and star.max_wavefront == n - 1
+    assert star.bandwidth == n - 1
+    indep = matrix_features(independent_lower(n))
+    assert indep.depth == 1 and indep.n_edges == 0
+    assert indep.max_wavefront == n and indep.bandwidth == 0
+    assert indep.nnz == n  # diagonal only
+
+
+def test_features_memoized_per_fingerprint():
+    m = chain_lower(40)
+    f1 = matrix_features(m)
+    f2 = matrix_features(m)
+    assert f1 is f2  # cache hit returns the same object
+
+
+def test_features_invariant_under_section5_reorder(any_matrix):
+    """The §5 locality reorder relabels the DAG topologically — every
+    feature except the bandwidth pair must be preserved exactly."""
+    dag = dag_from_lower_csr(any_matrix)
+    f0 = dag_features(dag)
+    s = grow_local(dag, 8)
+    L2, _, _, _ = apply_reordering(any_matrix, s)
+    f2 = dag_features(dag_from_lower_csr(L2))
+    assert f0.invariant() == f2.invariant()
+    # ... and the reorder is allowed to (and usually does) change bandwidth
+    assert f0.invariant().keys() == {
+        "n", "nnz", "n_edges", "depth", "avg_wavefront", "max_wavefront",
+        "row_nnz_mean", "row_nnz_max", "row_skew",
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(20, 150),
+    density=st.floats(1e-3, 0.2),
+    k=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_features_reorder_invariance_property(n, density, k, seed):
+    m = erdos_renyi_lower(n, density, seed=seed)
+    dag = dag_from_lower_csr(m)
+    f0 = dag_features(dag)
+    L2, _, _, _ = apply_reordering(m, grow_local(dag, k))
+    f2 = dag_features(dag_from_lower_csr(L2))
+    assert f0.invariant() == f2.invariant()
+
+
+# ----------------------------------------------------------------- selector
+def test_classify_matches_corpus_metadata():
+    """Every corpus entry carries the regime label the classifier must
+    derive for it — the rule thresholds are calibrated on exactly this."""
+    for e in corpus_entries():
+        f = matrix_features(e.matrix())
+        assert classify(f) == e.regime, (e.name, classify(f), e.regime)
+
+
+def test_shortlist_is_small_and_deterministic():
+    for e in corpus_entries():
+        f = matrix_features(e.matrix())
+        cands = shortlist(f)
+        assert 2 <= len(cands) <= 3
+        assert cands == shortlist(f)
+        names = [c.strategy for c in cands]
+        assert len(set(names)) == len(names)
+        for c in cands:
+            assert c.strategy in available_strategies()
+
+
+def test_selection_deterministic_for_fixed_fingerprint():
+    m = erdos_renyi_lower(300, 0.01, seed=7)
+    picks = []
+    for _ in range(3):
+        clear_selection_memo()
+        sel = resolve_auto(m, options=ScheduleOptions())
+        picks.append((sel.strategy, sel.options, sel.cost))
+    assert picks[0] == picks[1] == picks[2]
+
+
+def test_select_schedule_winner_is_argmin():
+    for e in corpus_entries():
+        dag = dag_from_lower_csr(e.matrix())
+        sel, s = select_schedule(dag)
+        check_validity(dag, s)
+        costs = [c.cost for c in sel.candidates]
+        assert sel.cost == min(costs)
+        # returned schedule really is the winner's schedule
+        assert abs(bsp_cost(dag, s, L=sel.options.L) - sel.cost) < 1e-9
+
+
+# ------------------------------------------------- corpus acceptance bars
+def test_auto_beats_worst_and_tracks_best_fixed():
+    """The PR's acceptance criterion: on every corpus matrix, auto's BSP
+    cost beats the worst fixed strategy and is within 10% of the best
+    fixed strategy (all at default options, k=8)."""
+    for e in corpus_entries():
+        dag = dag_from_lower_csr(e.matrix())
+        costs = {
+            s: bsp_cost(dag, schedule(dag, 8, strategy=s))
+            for s in available_strategies()
+        }
+        best, worst = min(costs.values()), max(costs.values())
+        sel, _ = select_schedule(dag)
+        assert sel.cost <= 1.1 * best, (
+            f"{e.name}: auto={sel.cost} > 1.1 * best={best}"
+        )
+        assert sel.cost < worst, f"{e.name}: auto={sel.cost} >= worst={worst}"
+        assert sel.strategy in e.expected_best, (e.name, sel.strategy)
+
+
+def test_expected_best_metadata_is_accurate():
+    """The corpus' expected_best annotations are re-derived, not trusted:
+    each listed strategy must be within ~10% of the best fixed cost."""
+    for e in corpus_entries():
+        dag = dag_from_lower_csr(e.matrix())
+        costs = {
+            s: bsp_cost(dag, schedule(dag, 8, strategy=s))
+            for s in available_strategies()
+        }
+        best = min(costs.values())
+        for s in e.expected_best:
+            assert costs[s] <= 1.1 * best, (e.name, s, costs[s], best)
+
+
+# ------------------------------------------------------ end-to-end "auto"
+def test_plan_auto_solves_correctly():
+    m = corpus_entries()[0].matrix()
+    solver = TriangularSolver.plan(m, strategy="auto")
+    assert solver.strategy in available_strategies()
+    assert solver.selection is not None
+    b = np.random.default_rng(0).standard_normal(m.n_rows)
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(m, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3
+
+
+def test_registry_schedule_auto(any_dag):
+    s = schedule(any_dag, 8, strategy="auto")
+    check_validity(any_dag, s)
+
+
+def test_tune_requires_auto():
+    m = corpus_entries()[0].matrix()
+    with pytest.raises(ValueError, match="strategy='auto'"):
+        TriangularSolver.plan(m, strategy="growlocal", tune=True)
+
+
+def test_explicit_max_size_is_respected():
+    """shortlist adapts the funnel cap only when the caller left it at
+    the default — an explicit knob must survive auto selection."""
+    f = matrix_features(corpus_entries()[2].matrix())  # band_narrow
+    explicit = ScheduleOptions(max_size=32)
+    for c in shortlist(f, explicit):
+        assert c.options.max_size == 32
+    adapted = [
+        c for c in shortlist(f, ScheduleOptions()) if c.strategy == "funnel-gl"
+    ]
+    assert adapted and all(c.options.max_size != 32 for c in adapted)
+
+
+def test_auto_not_registerable():
+    from repro.pipeline import register_scheduler
+
+    with pytest.raises(ValueError, match="reserved"):
+        register_scheduler("auto")(lambda d, o: None)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 120),
+    density=st.floats(1e-3, 0.15),
+    k=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_auto_schedule_always_valid(n, density, k, seed):
+    """Property: strategy='auto' never returns an invalid schedule."""
+    m = erdos_renyi_lower(n, density, seed=seed)
+    dag = dag_from_lower_csr(m)
+    s = schedule(dag, k, strategy="auto")
+    check_validity(dag, s)
+    assert s.n == dag.n
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_auto_selection_deterministic_property(seed):
+    """Property: for a fixed fingerprint the selection never varies."""
+    m = erdos_renyi_lower(80, 0.05, seed=seed)
+    clear_selection_memo()
+    s1 = resolve_auto(m, options=ScheduleOptions())
+    clear_selection_memo()
+    s2 = resolve_auto(m, options=ScheduleOptions())
+    assert (s1.strategy, s1.options, s1.cost) == (s2.strategy, s2.options, s2.cost)
+    assert dataclasses.asdict(s1.features) == dataclasses.asdict(s2.features)
+
+
+@pytest.mark.slow
+def test_tune_mode_times_candidates():
+    """tune=True runs measured trials on the shortlist and records them."""
+    clear_selection_memo()
+    m = corpus_entries()[4].matrix()  # poisson2d_ichol
+    cache = PlanCache()
+    solver = TriangularSolver.plan(m, strategy="auto", tune=True, cache=cache)
+    sel = solver.selection
+    assert sel.tuned and sel.timings is not None
+    assert {t[0] for t in sel.timings} == {c.strategy for c in sel.candidates}
+    assert sel.strategy == min(sel.timings, key=lambda t: t[1])[0]
+    # only the tuned winner entered the caller's cache (losing trial plans
+    # stay private to the selection); re-planning is a pure hit
+    assert len(cache) == 1 and cache.stats.misses == 1
+    hits0 = cache.stats.hits
+    TriangularSolver.plan(m, strategy="auto", tune=True, cache=cache)
+    assert cache.stats.hits > hits0
+    b = np.random.default_rng(1).standard_normal(m.n_rows)
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(m, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3

@@ -1,0 +1,101 @@
+"""Cross-strategy conformance: every registered strategy must produce a
+valid schedule AND a correct solve on every scenario-corpus matrix, in
+both orientations, for single and batched right-hand sides.
+
+This is the safety net under ``strategy="auto"``: the selector may pick
+*any* registry strategy for *any* matrix, so every (strategy, scenario)
+cell has to work — including ``block`` and ``serial``, which the scheduler
+unit tests exercise only lightly. Solves are checked against the serial
+reference oracle (``repro.solver.reference`` via scipy's
+``spsolve_triangular``).
+
+The grid is corpus-wide (7 strategies x 9 matrices x 2 orientations x 2
+RHS shapes) and therefore ``slow``-marked; plans are shared through one
+module-level ``PlanCache`` so each (strategy, matrix, orientation) is
+scheduled and compiled once across the RHS parametrization.
+"""
+import numpy as np
+import pytest
+
+from repro.autotune import corpus_entry, corpus_names
+from repro.core import check_validity
+from repro.pipeline import (
+    PlanCache,
+    TriangularSolver,
+    available_strategies,
+    schedule,
+)
+from repro.sparse import dag_from_lower_csr, transpose_csr
+
+pytestmark = pytest.mark.slow
+
+STRATEGIES = available_strategies()  # all 7 registered strategies
+K = 8
+RTOL = 1e-3  # f32 executor vs f64 reference, relative to max |x|
+
+# one cache for the whole module: the 1-RHS and multi-RHS cells of a
+# (strategy, matrix, orientation) triple share a single compiled plan
+_CACHE = PlanCache()
+
+
+def _solver(name: str, strategy: str, lower: bool) -> TriangularSolver:
+    L = corpus_entry(name).matrix()
+    a = L if lower else transpose_csr(L)
+    return TriangularSolver.plan(
+        a, strategy=strategy, k=K, lower=lower, cache=_CACHE
+    )
+
+
+def _reference(name: str, lower: bool, b: np.ndarray) -> np.ndarray:
+    from scipy.sparse.linalg import spsolve_triangular
+
+    L = corpus_entry(name).matrix()
+    a = L if lower else transpose_csr(L)
+    return spsolve_triangular(a.to_scipy().tocsr(), b, lower=lower)
+
+
+def test_grid_is_complete():
+    """The suite really covers all 7 registered strategies (a new registry
+    entry must extend the corpus grid, not silently skip it)."""
+    assert len(STRATEGIES) == 7
+    assert set(STRATEGIES) == {
+        "block", "funnel-gl", "growlocal", "hdagg", "serial", "spmp",
+        "wavefront",
+    }
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("name", corpus_names())
+def test_schedule_validity(name, strategy):
+    """(a) Def. 2.1 validity for every (strategy, scenario) cell."""
+    dag = dag_from_lower_csr(corpus_entry(name).matrix())
+    s = schedule(dag, K, strategy=strategy)
+    check_validity(dag, s)
+    assert s.n == dag.n and s.n_supersteps >= 1
+
+
+@pytest.mark.parametrize("n_rhs", [1, 3], ids=["rhs1", "mrhs"])
+@pytest.mark.parametrize("lower", [True, False], ids=["lower", "upper"])
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("name", corpus_names())
+def test_solve_matches_reference(name, strategy, lower, n_rhs):
+    """(b) every cell solves to tolerance against the reference oracle."""
+    solver = _solver(name, strategy, lower)
+    # str hash is salted per process — derive the seed from the stable
+    # corpus order instead so a near-tolerance failure is reproducible
+    rng = np.random.default_rng(
+        corpus_names().index(name) * 4 + 2 * int(lower) + int(n_rhs > 1)
+    )
+    n = solver.n
+    b = rng.standard_normal((n, n_rhs)) if n_rhs > 1 else rng.standard_normal(n)
+    x = np.asarray(solver.solve(b))
+    assert x.shape == b.shape
+    B = b.reshape(n, -1)
+    X = x.reshape(n, -1)
+    for j in range(B.shape[1]):
+        ref = _reference(name, lower, B[:, j])
+        scale = max(np.abs(ref).max(), 1e-30)
+        assert np.abs(X[:, j] - ref).max() / scale < RTOL, (
+            f"{strategy} on {name} ({'lower' if lower else 'upper'}, "
+            f"rhs {j}) exceeded tolerance"
+        )

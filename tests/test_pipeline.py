@@ -193,9 +193,9 @@ def test_upper_solve_matches_scipy(ichol_matrix):
 
 def test_lower_flag_validates_triangularity(ichol_matrix):
     U = transpose_csr(ichol_matrix)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="lower-triangular"):
         TriangularSolver.plan(U, lower=True)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="upper-triangular"):
         TriangularSolver.plan(ichol_matrix, lower=False)
 
 
@@ -237,3 +237,84 @@ def test_multi_rhs_upper(ichol_matrix):
         xj = np.asarray(solver.solve(B[:, j].astype(np.float32)))
         scale = np.abs(xj).max()
         np.testing.assert_allclose(X[:, j] / scale, xj / scale, atol=1e-5)
+
+
+# ------------------------------------------- strategy="auto" + plan cache
+def test_auto_resolves_to_concrete_cache_key(er_matrix):
+    """An auto plan is cached under the RESOLVED config: planning the same
+    pattern with the explicit (strategy, options) the selector picked must
+    be a cache hit on the very same entry."""
+    cache = PlanCache()
+    s1 = TriangularSolver.plan(er_matrix, strategy="auto", cache=cache)
+    s2 = TriangularSolver.plan(
+        er_matrix, strategy=s1.strategy, options=s1.selection.options,
+        cache=cache,
+    )
+    assert s2 is s1
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_auto_refactorization_skips_reselection(er_matrix):
+    """Regression: the §7.7 refactorization loop (same pattern, new values)
+    on an auto-planned solver must hit both the selection memo and the plan
+    cache — no feature extraction, no candidate scoring, no rescheduling."""
+    cache = PlanCache()
+    rng = np.random.default_rng(8)
+    b = rng.standard_normal(er_matrix.n_rows)
+    s1 = TriangularSolver.plan(er_matrix, strategy="auto", cache=cache)
+    assert cache.stats.selections == 1 and cache.stats.misses == 1
+
+    scaled = _with_data(
+        er_matrix, er_matrix.data * (1.0 + rng.uniform(0.1, 1.0, er_matrix.nnz))
+    )
+    s2 = TriangularSolver.plan(scaled, strategy="auto", cache=cache)
+    st = cache.stats
+    assert st.selections == 1, "refactorization re-ran strategy selection"
+    assert st.selection_hits == 1
+    assert st.hits == 1 and st.misses == 1 and st.numeric_updates == 1
+    # both solvers solve with their own values
+    x2 = np.asarray(s2.solve(b))
+    ref2 = solve_lower_scipy(scaled, b)
+    assert np.abs(x2 - ref2).max() / np.abs(ref2).max() < 1e-4
+    x1 = np.asarray(s1.solve(b))
+    ref1 = solve_lower_scipy(er_matrix, b)
+    assert np.abs(x1 - ref1).max() / np.abs(ref1).max() < 1e-4
+    # an in-place numeric_update on the clone also never re-selects
+    s2.numeric_update(_with_data(er_matrix, er_matrix.data * 2.0))
+    assert cache.stats.selections == 1
+
+
+def test_auto_hit_never_mutates_fixed_built_solver(er_matrix):
+    """Regression: an auto plan that cache-hits an entry originally built
+    by a FIXED-strategy plan returns it unchanged — cached solvers are
+    never mutated behind earlier callers' backs. The resolved outcome
+    still lands in the cache's selection memo."""
+    from repro.autotune import resolve_auto
+
+    probe = resolve_auto(er_matrix, options=ScheduleOptions())
+    cache = PlanCache()
+    s1 = TriangularSolver.plan(
+        er_matrix, strategy=probe.strategy, options=probe.options, cache=cache
+    )
+    assert s1.selection is None
+    s2 = TriangularSolver.plan(er_matrix, strategy="auto", cache=cache)
+    assert s2 is s1 and cache.stats.hits == 1
+    assert s1.selection is None  # untouched; memo has the Selection
+    assert cache.stats.selections == 1
+
+
+def test_cache_hit_clone_never_aliases_value_buffers(er_matrix):
+    """Regression: the clone a cache hit returns for new values must own
+    its numeric tensors — writing through one solver can never corrupt the
+    other (the immutable schedule/index structure MAY be shared)."""
+    cache = PlanCache()
+    s1 = TriangularSolver.plan(er_matrix, strategy="auto", cache=cache)
+    scaled = _with_data(er_matrix, er_matrix.data * 3.0)
+    s2 = TriangularSolver.plan(scaled, strategy="auto", cache=cache)
+    assert s2 is not s1
+    assert not np.shares_memory(s2.exec_plan.vals, s1.exec_plan.vals)
+    assert not np.shares_memory(s2.exec_plan.diag, s1.exec_plan.diag)
+    assert s2._source_data is not s1._source_data
+    before = s1.exec_plan.vals.copy()
+    s2.numeric_update(_with_data(er_matrix, er_matrix.data * 5.0))
+    np.testing.assert_array_equal(s1.exec_plan.vals, before)

@@ -35,10 +35,22 @@ def test_chunked_matches_sequential(chunk, decay_scale):
     r, k, v, w, log_w, u, S0 = _random_wkv_inputs(rng, B, S, H, Dh, decay_scale)
     S_seq, o_seq = _wkv_sequential(r, k, v, w, u, S0)
     S_chk, o_chk = _wkv_chunked(r, k, v, log_w, u, S0, chunk)
+    # The two paths are algebraically identical but accumulate the decay in
+    # different f32 orders: the scan multiplies `chunk` individually-rounded
+    # exp(log_w_t) factors, the chunked path exponentiates one rounded
+    # cumulative sum. The relative divergence is bounded by
+    # ~ chunk * max|log_w| * eps_f32, and max|log_w| grows with
+    # exp(decay_scale) — so the tolerance scales with chunk * decay_scale.
+    # (Verified: the hardest cell, chunk=16 / decay_scale=2.0, peaks at
+    # ~3e-4 relative on 1 of 1536 elements; a fixed 2e-4 is below the f32
+    # floor of that cell, not evidence of an accumulation bug — rerunning
+    # both paths with float64 accumulation collapses the same cell's
+    # mismatch to ~3e-13.)
+    tol = 2e-4 * max(1.0, chunk * decay_scale / 8.0)
     np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_seq),
-                               rtol=2e-4, atol=2e-4)
+                               rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(S_chk), np.asarray(S_seq),
-                               rtol=2e-4, atol=2e-4)
+                               rtol=tol, atol=tol)
 
 
 @settings(max_examples=15, deadline=None)
