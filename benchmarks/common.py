@@ -124,3 +124,33 @@ def print_csv(name: str, rows: List[Tuple]):
     """Uniform output: name,us_per_call,derived."""
     for row in rows:
         print(",".join(str(r) for r in row), flush=True)
+
+
+def rows_payload(csv_rows: List[Tuple], tables: List[str], **extra) -> dict:
+    """The machine-readable twin of the CSV block: every benchmark row as
+    a dict, plus run metadata. One schema shared by ``benchmarks.run
+    --json`` and ``benchmarks.serve_load`` so downstream BENCH trajectory
+    tooling parses a single format."""
+    import time as _time
+
+    return {
+        "schema": "repro-bench-rows/v1",
+        "generated_unix": round(_time.time(), 3),
+        "tables": list(tables),
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in csv_rows
+        ],
+        **extra,
+    }
+
+
+def write_json_rows(
+    path: str, csv_rows: List[Tuple], tables: List[str], **extra
+) -> None:
+    import json
+
+    with open(path, "w") as fh:
+        json.dump(rows_payload(csv_rows, tables, **extra), fh, indent=2)
+        fh.write("\n")
+    print(f"[json written to {path}]", flush=True)

@@ -1,12 +1,16 @@
 """Benchmark harness — one module per paper table. Prints human tables to
-stdout and a ``name,us_per_call,derived`` CSV block at the end.
+stdout and a ``name,us_per_call,derived`` CSV block at the end; with
+``--json PATH`` the same rows are written as machine-readable JSON
+(schema ``repro-bench-rows/v1``, shared with ``benchmarks.serve_load``)
+to seed the BENCH trajectory.
 
-  PYTHONPATH=src python -m benchmarks.run              # all tables
-  PYTHONPATH=src python -m benchmarks.run t71 t72      # subset
+  PYTHONPATH=src python -m benchmarks.run                   # all tables
+  PYTHONPATH=src python -m benchmarks.run t71 t72           # subset
+  PYTHONPATH=src python -m benchmarks.run t7x --json out.json
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 TABLES = {
@@ -24,7 +28,20 @@ TABLES = {
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(TABLES)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "tables", nargs="*",
+        help=f"table keys to run (default: all of {', '.join(TABLES)})",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write every row as machine-readable JSON to PATH",
+    )
+    args = ap.parse_args()
+    unknown = [t for t in args.tables if t not in TABLES]
+    if unknown:
+        ap.error(f"unknown tables {unknown}; available: {list(TABLES)}")
+    which = args.tables or list(TABLES)
     csv_rows = []
     for key in which:
         mod_name, desc = TABLES[key]
@@ -36,6 +53,10 @@ def main() -> None:
     print("\n# CSV: name,us_per_call,derived")
     for name, val, derived in csv_rows:
         print(f"{name},{val},{derived}")
+    if args.json:
+        from benchmarks.common import write_json_rows
+
+        write_json_rows(args.json, csv_rows, which)
 
 
 if __name__ == "__main__":

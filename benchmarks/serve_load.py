@@ -1,0 +1,232 @@
+"""Serving throughput — pattern-routed microbatching vs one-at-a-time.
+
+Replays request mixes over the 9-matrix autotune corpus through
+``repro.serve.SolveService`` and reports, per mix:
+
+  * **batched**  — the real service (``max_batch`` > 1, microbatching);
+  * **baseline** — the same service machinery with ``max_batch=1``
+    (every request is its own solve: the one-request-at-a-time floor);
+  * **speedup**  — batched/baseline solves-per-second, with p50/p99
+    latency for both.
+
+Mixes (``repro.serve.loadgen``): ``hot`` (geometric skew — the regime
+the paper's §7.7 amortization argument targets, acceptance bar: >= 2x),
+``uniform``, and ``adversarial`` (many distinct cold patterns — nothing
+coalesces; reported so the cost of the worst case is visible, not
+asserted).
+
+Warm-up compiles every (plan, batch-width) XLA variant and then resets
+the telemetry, so measured percentiles reflect steady-state serving.
+Output: human table + ``repro-bench-rows/v1`` JSON (``--json``), the
+same schema as ``benchmarks.run --json``.
+
+  PYTHONPATH=src:. python -m benchmarks.serve_load --json serve.json
+  PYTHONPATH=src:. python -m benchmarks.serve_load --smoke   # CI: validate
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import geomean, write_json_rows
+from repro.pipeline import PlanCache
+from repro.serve import (
+    SolveService,
+    pad_width,
+    patterns_for_mix,
+    pretty,
+    run_closed_loop,
+)
+
+# closed-loop concurrency bounds the largest possible batch: with
+# n_clients in flight, the hot route (mix weight ~0.5) sees ~n_clients/2
+# concurrent requests, so n_clients = 2*max_batch lets hot batches fill
+DEFAULTS = dict(
+    max_batch=16,
+    max_wait_us=2000,
+    n_clients=32,
+    requests_per_client=25,
+    strategy="auto",
+    backend="scan",
+)
+
+
+def _warm(service: SolveService, patterns) -> None:
+    """Compile every (plan, pow2 batch width) XLA variant up front, then
+    zero the telemetry so measurements see steady state."""
+    widths = sorted(
+        {pad_width(m, service.max_batch) for m in range(1, service.max_batch + 1)}
+    )
+    for fp, n in patterns:
+        solver = service.pattern(fp).solver_for(service.pattern(fp).current)
+        for w in widths:
+            np.asarray(solver.solve(np.zeros((n, w), np.float32)))
+    service.metrics.reset()
+
+
+def _measure(
+    mix: str,
+    *,
+    cache: PlanCache,
+    max_batch: int,
+    max_wait_us: int,
+    n_clients: int,
+    requests_per_client: int,
+    strategy: str,
+    backend: str,
+    validate: bool,
+    n_adversarial: int = 12,
+) -> dict:
+    with SolveService(
+        max_batch=max_batch,
+        max_wait_us=max_wait_us,
+        cache=cache,
+        strategy=strategy,
+        backend=backend,
+    ) as svc:
+        patterns, sampler = patterns_for_mix(
+            svc, mix, n_adversarial=n_adversarial, seed=3
+        )
+        _warm(svc, patterns)
+        report = run_closed_loop(
+            svc,
+            sampler,
+            n_clients=n_clients,
+            requests_per_client=requests_per_client,
+            validate=validate,
+        )
+    return report
+
+
+def run(csv_rows, *, smoke: bool = False, opts: dict = None) -> dict:
+    o = {**DEFAULTS, **(opts or {})}
+    if smoke:
+        o.update(n_clients=16, requests_per_client=8)
+    validate = smoke or o.pop("validate", False)
+    cache = PlanCache()  # shared: baseline re-uses the batched run's plans
+    out = {}
+    print(
+        f"# serve_load — corpus serving, {o['n_clients']} clients x "
+        f"{o['requests_per_client']} reqs, max_batch={o['max_batch']}, "
+        f"max_wait={o['max_wait_us']}us, strategy={o['strategy']}, "
+        f"backend={o['backend']}"
+    )
+    print(
+        f"{'mix':12s} {'mode':9s} {'solves/s':>9s} {'p50 us':>9s} "
+        f"{'p99 us':>10s} {'mean batch':>11s} {'mismatch':>9s}"
+    )
+    speedups = []
+    for mix in ("hot", "uniform", "adversarial"):
+        per_mode = {}
+        for mode, mb in (("batched", o["max_batch"]), ("baseline", 1)):
+            rep = _measure(
+                mix,
+                cache=cache,
+                max_batch=mb,
+                max_wait_us=o["max_wait_us"],
+                n_clients=o["n_clients"],
+                requests_per_client=o["requests_per_client"],
+                strategy=o["strategy"],
+                backend=o["backend"],
+                validate=validate,
+            )
+            per_mode[mode] = rep
+            print(
+                f"{mix:12s} {mode:9s} {rep['solves_per_sec']:9.1f} "
+                f"{rep['latency_us']['p50']:9.1f} "
+                f"{rep['latency_us']['p99']:10.1f} "
+                f"{rep['mean_batch_size']:11.2f} "
+                f"{str(rep['bitwise_mismatches']):>9s}"
+            )
+            if validate and (
+                rep["bitwise_mismatches"] or rep["errors"]
+            ):
+                raise SystemExit(
+                    f"serve_load validation FAILED on mix={mix} mode={mode}: "
+                    f"{rep['bitwise_mismatches']} bitwise mismatches, "
+                    f"{rep['errors']} errors"
+                )
+        speed = (
+            per_mode["batched"]["solves_per_sec"]
+            / max(per_mode["baseline"]["solves_per_sec"], 1e-9)
+        )
+        speedups.append((mix, speed))
+        out[mix] = {**per_mode, "speedup": round(speed, 2)}
+        print(f"{mix:12s} {'speedup':9s} {speed:9.2f}x")
+        csv_rows.append(
+            (
+                f"serve.{mix}.batched",
+                round(1e6 / max(per_mode["batched"]["solves_per_sec"], 1e-9), 1),
+                round(speed, 3),
+            )
+        )
+        csv_rows.append(
+            (
+                f"serve.{mix}.baseline",
+                round(1e6 / max(per_mode["baseline"]["solves_per_sec"], 1e-9), 1),
+                1.0,
+            )
+        )
+    print(
+        "speedups: "
+        + ", ".join(f"{m}={s:.2f}x" for m, s in speedups)
+        + f", geomean={geomean([s for _, s in speedups]):.2f}x"
+    )
+    hot = dict(speedups)["hot"]
+    print(
+        f"hot-mix acceptance (>=2x batched vs one-at-a-time): "
+        f"{'PASS' if hot >= 2.0 else 'MISS'} ({hot:.2f}x)"
+    )
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: fewer requests, bitwise-validate every result "
+        "against the direct solver, print the metrics dict",
+    )
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=DEFAULTS["max_batch"])
+    ap.add_argument(
+        "--max-wait-us", type=int, default=DEFAULTS["max_wait_us"]
+    )
+    ap.add_argument("--clients", type=int, default=DEFAULTS["n_clients"])
+    ap.add_argument(
+        "--requests", type=int, default=DEFAULTS["requests_per_client"],
+        help="requests per client",
+    )
+    ap.add_argument("--strategy", default=DEFAULTS["strategy"])
+    ap.add_argument("--backend", default=DEFAULTS["backend"])
+    args = ap.parse_args(argv)
+    csv_rows = []
+    out = run(
+        csv_rows,
+        smoke=args.smoke,
+        opts=dict(
+            max_batch=args.max_batch,
+            max_wait_us=args.max_wait_us,
+            n_clients=args.clients,
+            requests_per_client=args.requests,
+            strategy=args.strategy,
+            backend=args.backend,
+            validate=args.validate,
+        ),
+    )
+    if args.smoke:
+        # the ISSUE's CI contract: results matched direct solves (enforced
+        # above) and the metrics dict is printed
+        print(pretty(out["hot"]["batched"]["metrics"]))
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    if args.json:
+        write_json_rows(args.json, csv_rows, ["serve"], serve=out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,114 @@
+"""CLI for the batching solve service — drive a load mix, print metrics.
+
+Replays a request mix over the autotune scenario corpus (or a set of
+adversarial all-distinct patterns) through ``repro.serve.SolveService``
+and prints the telemetry snapshot; optionally dumps the full report as
+JSON (same shape as ``repro.serve.loadgen`` reports).
+
+  PYTHONPATH=src python -m repro.launch.solver_serve --mix hot
+  PYTHONPATH=src python -m repro.launch.solver_serve \\
+      --mix uniform --clients 16 --requests 50 --max-batch 32
+  PYTHONPATH=src python -m repro.launch.solver_serve \\
+      --mix hot --open-loop 400 --n-requests 800 --json report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.serve import (
+    MIXES,
+    SolveService,
+    patterns_for_mix,
+    pretty,
+    run_closed_loop,
+    run_open_loop,
+)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mix", choices=MIXES, default="hot")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument(
+        "--requests", type=int, default=25, help="requests per client"
+    )
+    ap.add_argument(
+        "--open-loop", type=float, metavar="RATE_HZ", default=None,
+        help="open-loop mode at RATE_HZ (default: closed loop)",
+    )
+    ap.add_argument(
+        "--n-requests", type=int, default=200,
+        help="total requests in open-loop mode",
+    )
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-us", type=int, default=2000)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--strategy", default="auto")
+    ap.add_argument("--backend", choices=("scan", "pallas"), default="scan")
+    ap.add_argument(
+        "--adversarial-patterns", type=int, default=16,
+        help="distinct patterns for --mix adversarial",
+    )
+    ap.add_argument(
+        "--validate", action="store_true",
+        help="bitwise-check every served result against the direct solver",
+    )
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args(argv)
+
+    plan_kw = {}
+    if args.backend == "pallas":
+        plan_kw["interpret"] = True  # CPU containers have no TPU
+    with SolveService(
+        max_batch=args.max_batch,
+        max_wait_us=args.max_wait_us,
+        n_workers=args.workers,
+        strategy=args.strategy,
+        backend=args.backend,
+        **plan_kw,
+    ) as svc:
+        patterns, sampler = patterns_for_mix(
+            svc, args.mix, n_adversarial=args.adversarial_patterns
+        )
+        print(
+            f"registered {len(patterns)} patterns "
+            f"(mix={args.mix}, backend={args.backend}, "
+            f"strategy={args.strategy})",
+            flush=True,
+        )
+        if args.open_loop is not None:
+            report = run_open_loop(
+                svc,
+                sampler,
+                rate_hz=args.open_loop,
+                n_requests=args.n_requests,
+                validate=args.validate,
+            )
+        else:
+            report = run_closed_loop(
+                svc,
+                sampler,
+                n_clients=args.clients,
+                requests_per_client=args.requests,
+                validate=args.validate,
+            )
+        print(
+            f"\n{report['mode']} loop: {report['requests']} requests in "
+            f"{report['elapsed_seconds']}s -> "
+            f"{report['solves_per_sec']} solves/s, "
+            f"errors={report['errors']}, "
+            f"bitwise_mismatches={report['bitwise_mismatches']}"
+        )
+        print(pretty(report["metrics"]))
+    if args.validate and (report["bitwise_mismatches"] or report["errors"]):
+        raise SystemExit("validation failed")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+        print(f"[json written to {args.json}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,9 +32,14 @@ from repro.pipeline.registry import (
 )
 from repro.pipeline.solver import TriangularSolver, factor_pair
 
+# the cheap pattern handle (re-exported so serving clients can fingerprint
+# once and submit by handle without importing the sparse layer)
+from repro.sparse.csr import pattern_fingerprint
+
 __all__ = [
     "CacheStats",
     "PlanCache",
+    "pattern_fingerprint",
     "ScheduleOptions",
     "available_strategies",
     "get_scheduler",

@@ -61,6 +61,8 @@ class PlanCache:
         # forever while the plan entries themselves are being evicted.
         self._selections: "OrderedDict[Hashable, object]" = OrderedDict()
         self._selections_max = max(4 * maxsize, 64) if maxsize else 4096
+        # keys exempt from LRU eviction (live-serving plans — see pin())
+        self._pinned: set = set()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -107,10 +109,46 @@ class PlanCache:
                 return entry, True
             self.stats.misses += 1
             self._entries[key] = built
-            if self.maxsize is not None and len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
-                self.stats.evictions += 1
+            self._evict_locked()
         return built, False
+
+    def _evict_locked(self) -> None:
+        """Evict oldest *unpinned* entries down to maxsize. Pinned entries
+        never leave (the cache may exceed maxsize while everything is
+        pinned — bounded by the number of live pins, i.e. the serving
+        set, which is exactly what the pins protect)."""
+        if self.maxsize is None:
+            return
+        over = len(self._entries) - self.maxsize
+        if over <= 0:
+            return
+        for key in [k for k in self._entries if k not in self._pinned]:
+            self._entries.pop(key)
+            self.stats.evictions += 1
+            over -= 1
+            if over <= 0:
+                break
+
+    # --------------------------------------------------- eviction-safe pins
+    def pin(self, key: Hashable) -> None:
+        """Exempt ``key`` from LRU eviction while it serves live traffic
+        (``repro.serve`` pins every registered pattern's plan). Idempotent;
+        pinning a key with no entry yet is allowed — it protects the entry
+        whenever it appears."""
+        with self._lock:
+            self._pinned.add(key)
+
+    def unpin(self, key: Hashable) -> None:
+        """Drop the eviction exemption (idempotent); the entry itself
+        stays until normal LRU pressure removes it."""
+        with self._lock:
+            self._pinned.discard(key)
+            self._evict_locked()
+
+    @property
+    def pinned(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._pinned)
 
     def replace(self, key: Hashable, entry: object) -> None:
         """Swap the canonical entry for ``key`` (e.g. after a value
@@ -128,3 +166,4 @@ class PlanCache:
         with self._lock:
             self._entries.clear()
             self._selections.clear()
+            self._pinned.clear()

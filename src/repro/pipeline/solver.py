@@ -139,6 +139,7 @@ class TriangularSolver:
         self._interpret = interpret
         self._source_data: Optional[np.ndarray] = None  # set by plan()
         self._selection = None  # autotune Selection, set by plan(auto)
+        self.plan_key = None  # concrete plan-cache key, set by plan()
         total_inv = np.empty_like(total_perm)
         total_inv[total_perm] = np.arange(len(total_perm))
         self._perm = jnp.asarray(total_perm, jnp.int32)
@@ -266,6 +267,29 @@ class TriangularSolver:
         )
         new.numeric_update(data)
         return new
+
+    def clone_with_values(self, a) -> "TriangularSolver":
+        """Public sibling-with-new-values: ``a`` is a CSRMatrix with the
+        planned pattern (fingerprint-checked) or its raw ``.data``. THIS
+        solver is untouched — the live-refactorization primitive
+        ``repro.serve`` version-swaps with (in-flight batches keep reading
+        the old solver's tensors)."""
+        if isinstance(a, CSRMatrix):
+            if pattern_fingerprint(a) != self.fingerprint:
+                raise ValueError(
+                    "clone_with_values requires the sparsity pattern the "
+                    "plan was built for (pattern fingerprint mismatch)"
+                )
+            data = a.data
+        else:
+            data = np.asarray(a)
+        return self._with_values(data)
+
+    @property
+    def source_values(self) -> Optional[np.ndarray]:
+        """The caller-order entry values this solver was built/refreshed
+        from (read-only view — used to detect value changes cheaply)."""
+        return self._source_data
 
     @property
     def n(self) -> int:
@@ -436,8 +460,14 @@ class TriangularSolver:
         # cache fully formed, so no published solver is ever mutated
         builder = build if pre_solver is None else (lambda: pre_solver)
         if cache is None or sched is not None:
-            return builder()
+            solver = builder()
+            if sched is None:  # prebuilt schedules have no cacheable key
+                solver.plan_key = key
+            return solver
         solver, hit = cache.get_or_build(key, builder)
+        # idempotent on hits (the key IS the entry's key); lets callers
+        # pin/unpin the entry (PlanCache.pin) without recomputing the key
+        solver.plan_key = key
         if hit and not np.array_equal(solver._source_data, a.data):
             # same pattern, new values: clone with refreshed numerics (the
             # cached entry — and anyone holding it — stays untouched), then

@@ -1,0 +1,59 @@
+"""``repro.serve`` — a batching SpTRSV solve service on top of
+``repro.pipeline``.
+
+Turn a stream of independent solve requests into few large batched
+solves: requests sharing a sparsity pattern are coalesced (pattern-routed
+microbatching) into one multi-RHS ``solve(B[n, m])`` against the cached
+plan, and factor values can be swapped live between microbatches without
+corrupting queued work (version-pinned plans).
+
+    from repro.serve import SolveService
+
+    with SolveService(max_batch=32, max_wait_us=2000) as svc:
+        fp = svc.register(L)            # plan once; cheap handle back
+        x = svc.solve(fp, b)            # or submit(fp, b) -> SolveTicket
+        svc.numeric_update(fp, new_vals)  # live refactorization
+        svc.print_stats()
+
+Module map:
+
+  * ``service`` — ``SolveService`` / ``SolveTicket`` (admission, workers)
+  * ``batcher`` — pattern-routed microbatching queue (``MicroBatcher``)
+  * ``updates`` — version-tagged plans for live refactorization
+  * ``metrics`` — per-pattern + global telemetry (``ServeMetrics``)
+  * ``loadgen`` — request-mix load generator (hot / uniform / adversarial)
+"""
+from repro.serve.batcher import MicroBatcher, pad_width
+from repro.serve.loadgen import (
+    MIXES,
+    adversarial_patterns,
+    corpus_patterns,
+    make_sampler,
+    mix_weights,
+    patterns_for_mix,
+    run_closed_loop,
+    run_open_loop,
+)
+from repro.serve.metrics import LatencyReservoir, ServeMetrics, pretty
+from repro.serve.service import SolveService, SolveTicket, direct_reference
+from repro.serve.updates import VersionedPlans
+
+__all__ = [
+    "MicroBatcher",
+    "pad_width",
+    "MIXES",
+    "adversarial_patterns",
+    "corpus_patterns",
+    "make_sampler",
+    "mix_weights",
+    "patterns_for_mix",
+    "run_closed_loop",
+    "run_open_loop",
+    "LatencyReservoir",
+    "ServeMetrics",
+    "pretty",
+    "SolveService",
+    "SolveTicket",
+    "direct_reference",
+    "VersionedPlans",
+]

@@ -1,0 +1,111 @@
+"""Pattern-routed microbatching — the heart of the solve service.
+
+Requests are keyed by *route* — ``(pattern fingerprint, plan version)`` —
+because only requests that share both the sparsity pattern and the factor
+values can legally ride one multi-RHS ``solve(B[n, m])``. A route's group
+is dispatched when it reaches ``max_batch`` or when its oldest request has
+waited ``max_wait_us`` (the classic throughput/latency knob pair of
+serving systems), whichever comes first. ``close()`` flushes every
+remaining group immediately, so shutdown never strands a request.
+
+Bitwise contract: at a fixed batch width and column position, the
+executor's multi-RHS path never lets neighbor columns change a column's
+bits (each output column's FP op sequence reads only its own column —
+property-tested in tests/test_serve.py), so coalescing never changes a
+request's bits relative to a direct solve of a batch with the same shape
+and placement. Across widths and positions XLA may vectorize the batched
+einsum differently; ``pad_width`` therefore quantizes every dispatch to
+a power-of-two width — pinning down the (width, position) a request was
+served at (recorded on its ticket) and capping each plan shape at
+log2(max_batch) compiled XLA variants.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from typing import Hashable, List, Optional, Tuple
+
+
+def pad_width(m: int, max_batch: int) -> int:
+    """Batch width actually dispatched for ``m`` queued requests: the next
+    power of two >= max(m, 2), capped at ``max_batch``. ``max_batch=1``
+    (the no-batching baseline) is the one width-1 escape hatch."""
+    if max_batch <= 1:
+        return 1
+    w = 2
+    while w < m:
+        w *= 2
+    return min(w, max_batch)
+
+
+class MicroBatcher:
+    """Thread-safe grouping queue: ``put(route, item)`` from any number of
+    producers, ``next_batch()`` from worker threads. FIFO within a route;
+    across routes the fullest-then-oldest group dispatches first."""
+
+    def __init__(self, *, max_batch: int = 32, max_wait_us: int = 2000):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_wait = max_wait_us / 1e6
+        self._cond = threading.Condition()
+        self._groups: "OrderedDict[Hashable, List]" = OrderedDict()
+        self._arrival: dict = {}  # route -> perf_counter of oldest item
+        self._closed = False
+
+    def depth(self) -> int:
+        with self._cond:
+            return sum(len(g) for g in self._groups.values())
+
+    def put(self, route: Hashable, item) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            group = self._groups.get(route)
+            if group is None:
+                group = self._groups[route] = []
+                self._arrival[route] = time.perf_counter()
+            group.append(item)
+            self._cond.notify()
+
+    def _pop(self, route) -> Tuple[Hashable, List]:
+        """Take up to ``max_batch`` items; a longer group keeps its place
+        (and its arrival time, so the remainder dispatches next)."""
+        group = self._groups[route]
+        if len(group) <= self.max_batch:
+            del self._groups[route]
+            del self._arrival[route]
+            return route, group
+        self._groups[route] = group[self.max_batch:]
+        return route, group[: self.max_batch]
+
+    def next_batch(self) -> Optional[Tuple[Hashable, List]]:
+        """Block until a group is dispatchable; None once closed AND
+        drained (the worker-loop exit signal)."""
+        with self._cond:
+            while True:
+                if self._groups:
+                    # any full group dispatches immediately
+                    for route, group in self._groups.items():
+                        if len(group) >= self.max_batch:
+                            return self._pop(route)
+                    if self._closed:  # flush: deadlines no longer apply
+                        return self._pop(next(iter(self._groups)))
+                    oldest = min(self._arrival, key=self._arrival.get)
+                    deadline = self._arrival[oldest] + self.max_wait
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        return self._pop(oldest)
+                    self._cond.wait(remaining)
+                else:
+                    if self._closed:
+                        return None
+                    self._cond.wait()
+
+    def close(self) -> None:
+        """Stop admissions and wake every worker; queued groups still
+        drain (flushed immediately) before ``next_batch`` returns None."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()

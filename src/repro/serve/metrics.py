@@ -1,0 +1,218 @@
+"""Serving telemetry — per-pattern and global, lock-guarded, snapshot-able.
+
+What a serving operator actually wants to see, per sparsity pattern and
+in aggregate:
+
+  * queue depth (how far behind the workers are),
+  * the batch-size histogram (is microbatching actually coalescing?),
+  * p50/p95/p99 end-to-end latency plus the queue-wait share of it,
+  * throughput (completed solves per second),
+  * plan-cache hit rate and live plan versions.
+
+Latencies go through a bounded reservoir (the most recent ``cap``
+samples) so a long-running service computes percentiles over recent
+traffic in O(cap) instead of growing without bound. ``snapshot()``
+returns a plain dict (JSON-ready, consumed by ``benchmarks/serve_load``)
+and ``pretty()`` renders it for humans.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter, deque
+from typing import Dict, Optional
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+class LatencyReservoir:
+    """Bounded sample window; percentiles over the most recent ``cap``."""
+
+    def __init__(self, cap: int = 4096):
+        self._samples: deque = deque(maxlen=cap)
+        self.count = 0  # lifetime, not window
+
+    def add(self, seconds: float) -> None:
+        self._samples.append(seconds)
+        self.count += 1
+
+    def extend(self, seconds_iter) -> None:
+        for s in seconds_iter:
+            self.add(s)
+
+    def percentiles_us(self) -> Dict[str, float]:
+        """{"p50": ..., "p95": ..., "p99": ...} in microseconds (NaN-free:
+        empty reservoirs report 0.0 so JSON stays parseable)."""
+        return _percentiles_us(np.fromiter(self._samples, dtype=np.float64))
+
+
+def _percentiles_us(arr: np.ndarray) -> Dict[str, float]:
+    if arr.size == 0:
+        return {f"p{q}": 0.0 for q in PERCENTILES}
+    vals = np.percentile(arr, PERCENTILES)
+    return {
+        f"p{q}": round(float(v) * 1e6, 1)
+        for q, v in zip(PERCENTILES, vals)
+    }
+
+
+class _PatternStats:
+    __slots__ = (
+        "submitted", "completed", "failed", "batches", "batch_hist",
+        "queue_wait", "e2e", "updates",
+    )
+
+    def __init__(self):
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        self.updates = 0  # numeric_update version swaps
+        self.batch_hist: Counter = Counter()  # actual batch size -> count
+        self.queue_wait = LatencyReservoir()
+        self.e2e = LatencyReservoir()
+
+
+class ServeMetrics:
+    """Thread-safe telemetry sink shared by the service and its workers."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero all counters and reservoirs — benchmarks call this after
+        their warm-up phase so compile-time latencies don't pollute the
+        measured percentiles."""
+        with self._lock:
+            self._patterns: Dict[str, _PatternStats] = {}
+            self._solve = LatencyReservoir()  # per-batch device solve time
+            self._t_first: Optional[float] = None
+            self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- record
+    def _pat(self, fp: str) -> _PatternStats:
+        p = self._patterns.get(fp)
+        if p is None:
+            p = self._patterns[fp] = _PatternStats()
+        return p
+
+    def record_submit(self, fp: str) -> None:
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+            self._pat(fp).submitted += 1
+
+    def record_update(self, fp: str) -> None:
+        with self._lock:
+            self._pat(fp).updates += 1
+
+    def record_batch(
+        self,
+        fp: str,
+        size: int,
+        *,
+        queue_waits,
+        e2e,
+        solve_seconds: float,
+    ) -> None:
+        with self._lock:
+            p = self._pat(fp)
+            p.completed += size
+            p.batches += 1
+            p.batch_hist[size] += 1
+            p.queue_wait.extend(queue_waits)
+            p.e2e.extend(e2e)
+            self._solve.add(solve_seconds)
+            self._t_last = time.perf_counter()
+
+    def record_failure(self, fp: str, size: int) -> None:
+        with self._lock:
+            self._pat(fp).failed += size
+            self._t_last = time.perf_counter()
+
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self, *, queue_depth: int = 0, extra: dict = None) -> dict:
+        """One JSON-ready dict: global aggregates + a per-pattern section.
+        ``extra`` (e.g. plan-cache stats, live versions) is merged at the
+        top level by the service."""
+        with self._lock:
+            per_pattern = {}
+            tot_sub = tot_done = tot_fail = tot_batches = 0
+            hist: Counter = Counter()
+            # global percentiles pool every pattern's window uncapped —
+            # funneling them through one capped reservoir would silently
+            # drop the first-inserted (often hottest) patterns' samples
+            all_e2e: list = []
+            all_queue: list = []
+            for fp, p in self._patterns.items():
+                tot_sub += p.submitted
+                tot_done += p.completed
+                tot_fail += p.failed
+                tot_batches += p.batches
+                hist.update(p.batch_hist)
+                all_e2e.extend(p.e2e._samples)
+                all_queue.extend(p.queue_wait._samples)
+                per_pattern[fp] = {
+                    "submitted": p.submitted,
+                    "completed": p.completed,
+                    "failed": p.failed,
+                    "batches": p.batches,
+                    "numeric_updates": p.updates,
+                    "batch_size_hist": dict(sorted(p.batch_hist.items())),
+                    "latency_us": p.e2e.percentiles_us(),
+                    "queue_wait_us": p.queue_wait.percentiles_us(),
+                }
+            elapsed = (
+                (self._t_last or 0.0) - (self._t_first or 0.0)
+                if self._t_first is not None
+                else 0.0
+            )
+            out = {
+                "submitted": tot_sub,
+                "completed": tot_done,
+                "failed": tot_fail,
+                "queue_depth": queue_depth,
+                "batches": tot_batches,
+                "mean_batch_size": round(tot_done / tot_batches, 2)
+                if tot_batches
+                else 0.0,
+                "batch_size_hist": dict(sorted(hist.items())),
+                "elapsed_seconds": round(max(elapsed, 0.0), 4),
+                "solves_per_sec": round(tot_done / elapsed, 1)
+                if elapsed > 0
+                else 0.0,
+                "latency_us": _percentiles_us(np.asarray(all_e2e)),
+                "queue_wait_us": _percentiles_us(np.asarray(all_queue)),
+                "batch_solve_us": self._solve.percentiles_us(),
+                "per_pattern": per_pattern,
+            }
+        if extra:
+            out.update(extra)
+        return out
+
+
+def pretty(snap: dict) -> str:
+    """Render a ``ServeMetrics.snapshot()`` dict for terminals."""
+    lines = [
+        "== serve metrics ==",
+        f"requests: {snap['completed']}/{snap['submitted']} completed"
+        f" ({snap['failed']} failed, queue depth {snap['queue_depth']})",
+        f"throughput: {snap['solves_per_sec']} solves/s over "
+        f"{snap['elapsed_seconds']}s in {snap['batches']} batches "
+        f"(mean batch {snap['mean_batch_size']})",
+        f"latency us: {snap['latency_us']}  "
+        f"queue wait us: {snap['queue_wait_us']}",
+        f"batch size hist: {snap['batch_size_hist']}",
+    ]
+    if "plan_cache" in snap:
+        lines.append(f"plan cache: {snap['plan_cache']}")
+    for fp, p in snap.get("per_pattern", {}).items():
+        lines.append(
+            f"  {fp[:12]}…: {p['completed']}/{p['submitted']} done, "
+            f"{p['batches']} batches, {p['numeric_updates']} updates, "
+            f"p50={p['latency_us']['p50']}us p99={p['latency_us']['p99']}us"
+        )
+    return "\n".join(lines)

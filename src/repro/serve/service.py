@@ -1,0 +1,377 @@
+"""``SolveService`` — many independent solve requests in, few batched
+multi-RHS solves out.
+
+The paper amortizes one schedule across hundreds of solves (§7.7); the
+service carries the same idea into a concurrent setting: client threads
+``submit(a_or_fingerprint, b)`` single-RHS requests, an admission queue
+routes them by sparsity-pattern fingerprint, and a worker loop coalesces
+each route's backlog (up to ``max_batch`` / ``max_wait_us``) into one
+``TriangularSolver.solve(B[n, m])`` against the cached plan, scattering
+the columns back to per-request tickets.
+
+Correctness contracts (enforced by tests/test_serve.py):
+
+  * every served result is bitwise-identical to a direct multi-RHS
+    ``solve`` of the same right-hand side on the pinned plan version at
+    the dispatched (batch width, column position) — both recorded on the
+    ticket; at a fixed width and position the executor's batched path
+    never lets neighbor columns change a request's bits
+    (``direct_reference``);
+  * ``numeric_update`` swaps values in *between* microbatches: requests
+    are pinned at admission to the then-current plan version
+    (``serve.updates``), so an update never corrupts or drops queued work.
+
+The service owns (or shares) a ``PlanCache`` and pins the plan entries it
+serves, so cache-eviction pressure from pattern churn cannot evict a plan
+with live traffic.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.pipeline import PlanCache, TriangularSolver
+from repro.serve.batcher import MicroBatcher, pad_width
+from repro.serve.metrics import ServeMetrics, pretty
+from repro.serve.updates import VersionedPlans
+from repro.sparse.csr import CSRMatrix, pattern_fingerprint
+
+
+class SolveTicket:
+    """Future for one submitted request. ``result()`` blocks until the
+    microbatch containing this request has been served."""
+
+    __slots__ = (
+        "fingerprint", "version", "batch_width", "batch_position",
+        "served_by", "_event", "_result", "_error", "t_submit", "t_done",
+    )
+
+    def __init__(self, fingerprint: str, version: int):
+        self.fingerprint = fingerprint
+        self.version = version  # plan version pinned at admission
+        self.batch_width: Optional[int] = None  # set at dispatch
+        self.batch_position: Optional[int] = None  # column in the batch
+        # the TriangularSolver that served this request — kept on the
+        # ticket so verification can replay the exact solve even after
+        # the version retires from the service's registry
+        self.served_by: Optional[TriangularSolver] = None
+        self._event = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("solve request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _fulfill(self, x, error: Optional[BaseException] = None) -> None:
+        self._result = x
+        self._error = error
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+
+class _Request:
+    __slots__ = ("ticket", "b")
+
+    def __init__(self, ticket: SolveTicket, b: np.ndarray):
+        self.ticket = ticket
+        self.b = b
+
+
+def direct_reference(
+    solver: TriangularSolver, b, width: int = 2, position: int = 0
+) -> np.ndarray:
+    """The bitwise reference for a served result: a direct
+    ``solver.solve`` of a batch with ``b`` at column ``position`` (zeros
+    elsewhere), at the dispatched width — both recorded on the ticket
+    (``batch_width`` / ``batch_position``). At a fixed (width, position),
+    a column's bits are independent of what the other columns hold
+    (property-tested in tests/test_serve.py), so this reproduces the
+    served bits exactly; across widths/positions XLA may vectorize the
+    batched einsum differently, so only float-tolerance comparisons
+    apply there."""
+    b = np.asarray(b)
+    B = np.zeros((b.shape[0], max(width, 1)), b.dtype)
+    B[:, position] = b
+    x = np.asarray(solver.solve(B))
+    return x[:, position]
+
+
+class SolveService:
+    """Batching SpTRSV solve service over ``repro.pipeline``.
+
+    Parameters mirror the two serving knobs plus the plan binding:
+    ``max_batch`` / ``max_wait_us`` bound each microbatch's size and
+    latency cost; ``n_workers`` executes batches concurrently (distinct
+    routes only — one batch owns its whole route group); everything in
+    ``plan_defaults`` (strategy, backend, dtype, k, ...) flows to
+    ``TriangularSolver.plan`` at registration.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 32,
+        max_wait_us: int = 2000,
+        n_workers: int = 1,
+        cache: Optional[PlanCache] = None,
+        strategy: str = "auto",
+        **plan_defaults,
+    ):
+        self.max_batch = max_batch
+        self.cache = cache if cache is not None else PlanCache()
+        self._plan_defaults = dict(strategy=strategy, **plan_defaults)
+        self._patterns: Dict[str, VersionedPlans] = {}
+        self._pinned_keys: set = set()  # released at close()
+        self._plock = threading.Lock()
+        self._batcher = MicroBatcher(
+            max_batch=max_batch, max_wait_us=max_wait_us
+        )
+        self.metrics = ServeMetrics()
+        self._closed = False
+        self._workers = [
+            threading.Thread(
+                target=self._worker_loop, name=f"solve-worker-{i}",
+                daemon=True,
+            )
+            for i in range(max(n_workers, 1))
+        ]
+        for w in self._workers:
+            w.start()
+
+    # ------------------------------------------------------------ patterns
+    def register(
+        self, a: CSRMatrix, *, lower: bool = True, **plan_kwargs
+    ) -> str:
+        """Plan (or re-use) the solver for ``a``'s sparsity pattern;
+        returns the pattern fingerprint — the cheap handle clients pass
+        to ``submit`` to skip re-hashing. Registering an already-known
+        pattern with new values is an implicit ``numeric_update``."""
+        if self._closed:
+            # a post-close registration would pin a cache key that no
+            # close() will ever release
+            raise RuntimeError("service is closed")
+        fp = pattern_fingerprint(a)
+        vp = self._patterns.get(fp)
+        if vp is not None and vp.lower != lower:
+            raise ValueError(
+                f"pattern {fp[:12]}… is registered with "
+                f"lower={vp.lower}; re-registering it with lower={lower} "
+                "would silently change the solve orientation"
+            )
+        if vp is None:
+            # plan outside the registry lock (the inspector can take
+            # seconds); racing registrations of one pattern share plan
+            # work through the PlanCache and keep the first-inserted entry
+            solver = TriangularSolver.plan(
+                a,
+                cache=self.cache,
+                lower=lower,
+                **{**self._plan_defaults, **plan_kwargs},
+            )
+            if solver.plan_key is not None:
+                self.cache.pin(solver.plan_key)
+                with self._plock:
+                    self._pinned_keys.add(solver.plan_key)
+            with self._plock:
+                vp = self._patterns.get(fp)
+                if vp is None:
+                    self._patterns[fp] = VersionedPlans(solver, lower=lower)
+                    return fp
+        if vp.lower != lower:  # racing registration with other orientation
+            raise ValueError(
+                f"pattern {fp[:12]}… is registered with lower={vp.lower}"
+            )
+        if not vp.values_match(np.asarray(a.data)):
+            self.numeric_update(fp, a.data)
+        return fp
+
+    def pattern(self, fp: str) -> VersionedPlans:
+        try:
+            return self._patterns[fp]
+        except KeyError:
+            raise KeyError(
+                f"unknown pattern fingerprint {fp!r}; submit the CSRMatrix "
+                "itself (auto-registers) or call register(a) first"
+            ) from None
+
+    # ------------------------------------------------------------- serving
+    def submit(
+        self,
+        a_or_fp: Union[CSRMatrix, str],
+        b,
+        *,
+        lower: Optional[bool] = None,
+        **plan_kwargs,
+    ) -> SolveTicket:
+        """Enqueue one single-RHS solve; returns a ``SolveTicket``.
+        ``a_or_fp`` is either a fingerprint from ``register`` (the fast
+        path — no hashing, no value comparison; orientation and plan
+        binding were fixed at registration, so ``lower``/``plan_kwargs``
+        only cross-check) or a ``CSRMatrix`` (auto-registers; same
+        pattern with new values triggers an implicit
+        ``numeric_update``)."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        if isinstance(a_or_fp, CSRMatrix):
+            fp = self.register(
+                a_or_fp,
+                lower=True if lower is None else lower,
+                **plan_kwargs,
+            )
+            vp = self.pattern(fp)
+        else:
+            fp = a_or_fp
+            vp = self.pattern(fp)
+            if lower is not None and lower != vp.lower:
+                raise ValueError(
+                    f"pattern {fp[:12]}… was registered with "
+                    f"lower={vp.lower}; it cannot serve lower={lower} "
+                    "requests"
+                )
+        b = np.asarray(b)
+        if b.ndim != 1 or b.shape[0] != vp.n:
+            raise ValueError(
+                f"submit takes one right-hand side f[n={vp.n}]; got "
+                f"{b.shape} (batching is the service's job)"
+            )
+        version, _ = vp.admit()
+        ticket = SolveTicket(fp, version)
+        self.metrics.record_submit(fp)
+        try:
+            self._batcher.put((fp, version), _Request(ticket, b))
+        except RuntimeError:
+            vp.complete(version)
+            raise
+        return ticket
+
+    def solve(
+        self,
+        a_or_fp: Union[CSRMatrix, str],
+        b,
+        *,
+        timeout: Optional[float] = None,
+        **kw,
+    ) -> np.ndarray:
+        """Blocking convenience: ``submit(...).result(timeout)``."""
+        return self.submit(a_or_fp, b, **kw).result(timeout)
+
+    def numeric_update(
+        self, a_or_fp: Union[CSRMatrix, str], data=None
+    ) -> int:
+        """Install new factor values for a registered pattern; returns the
+        new plan version. Requests already admitted stay pinned to their
+        version — the swap is only visible to later submissions."""
+        if isinstance(a_or_fp, CSRMatrix):
+            fp = pattern_fingerprint(a_or_fp)
+            payload = a_or_fp  # clone_with_values re-checks the pattern
+        else:
+            fp = a_or_fp
+            if data is None:
+                raise ValueError(
+                    "numeric_update(fingerprint) needs the new values"
+                )
+            payload = np.asarray(data)
+        vp = self.pattern(fp)
+        v = vp.update(payload)
+        self.metrics.record_update(fp)
+        return v
+
+    # -------------------------------------------------------------- worker
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._batcher.next_batch()
+            if item is None:
+                return
+            (fp, version), reqs = item
+            vp = self._patterns[fp]
+            t0 = time.perf_counter()
+            try:
+                solver = vp.solver_for(version)
+                m = len(reqs)
+                B = np.stack([r.b for r in reqs], axis=1)
+                w = pad_width(m, self.max_batch)
+                if w > m:
+                    B = np.concatenate(
+                        [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
+                    )
+                X = np.asarray(solver.solve(B))
+                t1 = time.perf_counter()
+                for j, r in enumerate(reqs):
+                    r.ticket.batch_width = w
+                    r.ticket.batch_position = j
+                    r.ticket.served_by = solver
+                    r.ticket._fulfill(np.ascontiguousarray(X[:, j]))
+                self.metrics.record_batch(
+                    fp,
+                    m,
+                    queue_waits=[t0 - r.ticket.t_submit for r in reqs],
+                    e2e=[r.ticket.t_done - r.ticket.t_submit for r in reqs],
+                    solve_seconds=t1 - t0,
+                )
+            except Exception as e:  # scatter the failure, keep serving
+                for r in reqs:
+                    r.ticket._fulfill(None, e)
+                self.metrics.record_failure(fp, len(reqs))
+            finally:
+                vp.complete(version, len(reqs))
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop admissions, drain the queue, join the workers."""
+        if self._closed:
+            return
+        self._closed = True
+        self._batcher.close()
+        for w in self._workers:
+            w.join(timeout)
+        # release the eviction pins — a shared PlanCache outliving this
+        # service must regain its normal LRU behavior
+        for key in self._pinned_keys:
+            self.cache.unpin(key)
+        self._pinned_keys.clear()
+
+    def __enter__(self) -> "SolveService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------- telemetry
+    def stats(self) -> dict:
+        """JSON-ready snapshot: serving telemetry + plan-cache stats +
+        live plan versions per pattern."""
+        cs = self.cache.stats
+        looked_up = cs.hits + cs.misses
+        return self.metrics.snapshot(
+            queue_depth=self._batcher.depth(),
+            extra={
+                "plan_cache": {
+                    **cs.as_dict(),
+                    "hit_rate": round(cs.hits / looked_up, 3)
+                    if looked_up
+                    else 0.0,
+                },
+                "patterns": {
+                    fp: {
+                        "versions_alive": vp.live_versions(),
+                        "current_version": vp.current,
+                    }
+                    for fp, vp in self._patterns.items()
+                },
+            },
+        )
+
+    def print_stats(self) -> None:
+        print(pretty(self.stats()), flush=True)

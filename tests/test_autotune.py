@@ -255,3 +255,42 @@ def test_tune_mode_times_candidates():
     x = np.asarray(solver.solve(b))
     ref = solve_lower_scipy(m, b)
     assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3
+
+
+@pytest.mark.slow
+def test_tune_mode_on_pallas_backend():
+    """tune=True trials honor the requested backend binding beyond the
+    scan executor: the shortlist is compiled and timed through the
+    Pallas kernel (interpret mode on this container), the winner solver
+    is bound to that backend, and its solves are correct."""
+    clear_selection_memo()
+    m = corpus_entries()[6].matrix()  # chain: 2-candidate shortlist
+    cache = PlanCache()
+    solver = TriangularSolver.plan(
+        m, strategy="auto", tune=True, cache=cache,
+        backend="pallas", interpret=True,
+    )
+    sel = solver.selection
+    assert sel.tuned and sel.timings is not None
+    assert {t[0] for t in sel.timings} == {c.strategy for c in sel.candidates}
+    assert all(t[1] > 0 for t in sel.timings)  # real measured trials
+    assert solver.backend == "pallas"
+    # the tuned winner is cached under its pallas binding: re-planning on
+    # the same backend is a pure hit, while a scan plan is NOT conflated
+    hits0 = cache.stats.hits
+    again = TriangularSolver.plan(
+        m, strategy="auto", tune=True, cache=cache,
+        backend="pallas", interpret=True,
+    )
+    assert cache.stats.hits > hits0 and again.backend == "pallas"
+    b = np.random.default_rng(2).standard_normal(m.n_rows)
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(m, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3
+    # the scan-bound tuned selection is memoized separately (binding is
+    # part of the tune-memo key)
+    scan_solver = TriangularSolver.plan(
+        m, strategy="auto", tune=True, cache=cache, backend="scan"
+    )
+    assert scan_solver.backend == "scan"
+    assert cache.stats.selections >= 2

@@ -9,10 +9,14 @@ unit tests exercise only lightly. Solves are checked against the serial
 reference oracle (``repro.solver.reference`` via scipy's
 ``spsolve_triangular``).
 
-The grid is corpus-wide (7 strategies x 9 matrices x 2 orientations x 2
-RHS shapes) and therefore ``slow``-marked; plans are shared through one
-module-level ``PlanCache`` so each (strategy, matrix, orientation) is
-scheduled and compiled once across the RHS parametrization.
+The solve grid runs on both execution backends: ``scan`` and
+``pallas`` in interpret mode (this container has no TPU; interpret
+executes the same kernel logic through the Pallas interpreter, so grid
+coverage carries to the kernel path). The grid is corpus-wide
+(7 strategies x 9 matrices x 2 orientations x 2 RHS shapes x 2
+backends) and therefore ``slow``-marked; plans are shared through one
+module-level ``PlanCache`` so each (strategy, matrix, orientation,
+backend) is scheduled and compiled once across the RHS parametrization.
 """
 import numpy as np
 import pytest
@@ -38,11 +42,15 @@ RTOL = 1e-3  # f32 executor vs f64 reference, relative to max |x|
 _CACHE = PlanCache()
 
 
-def _solver(name: str, strategy: str, lower: bool) -> TriangularSolver:
+def _solver(
+    name: str, strategy: str, lower: bool, backend: str = "scan"
+) -> TriangularSolver:
     L = corpus_entry(name).matrix()
     a = L if lower else transpose_csr(L)
+    kw = {"interpret": True} if backend == "pallas" else {}
     return TriangularSolver.plan(
-        a, strategy=strategy, k=K, lower=lower, cache=_CACHE
+        a, strategy=strategy, k=K, lower=lower, cache=_CACHE,
+        backend=backend, **kw,
     )
 
 
@@ -74,13 +82,15 @@ def test_schedule_validity(name, strategy):
     assert s.n == dag.n and s.n_supersteps >= 1
 
 
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
 @pytest.mark.parametrize("n_rhs", [1, 3], ids=["rhs1", "mrhs"])
 @pytest.mark.parametrize("lower", [True, False], ids=["lower", "upper"])
 @pytest.mark.parametrize("strategy", STRATEGIES)
 @pytest.mark.parametrize("name", corpus_names())
-def test_solve_matches_reference(name, strategy, lower, n_rhs):
-    """(b) every cell solves to tolerance against the reference oracle."""
-    solver = _solver(name, strategy, lower)
+def test_solve_matches_reference(name, strategy, lower, n_rhs, backend):
+    """(b) every cell solves to tolerance against the reference oracle,
+    on the scan executor and the Pallas kernel (interpret mode)."""
+    solver = _solver(name, strategy, lower, backend)
     # str hash is salted per process — derive the seed from the stable
     # corpus order instead so a near-tolerance failure is reproducible
     rng = np.random.default_rng(
