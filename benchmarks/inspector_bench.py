@@ -1,0 +1,221 @@
+"""Inspector-phase benchmark — plan compile + numeric update vs N.
+
+The paper's whole value proposition is a cheap inspector amortized over
+many executes (§7.7); this driver measures the two inspector-side hot
+paths the vectorized stack optimizes, on corpus families scaled to
+N in {1e4, 1e5}:
+
+  * **compile** — the vectorized ``compile_plan`` (O(nnz) array passes)
+    against ``_reference_compile_plan`` (the original per-row Python
+    compiler, kept as the equivalence oracle). Every timed pair is also
+    checked *bitwise* (``plans_bitwise_equal``) — a fast-but-different
+    plan would be worthless.
+  * **numeric update** — the ``repro.backends`` device-side
+    ``BoundSolve.update_values`` (an O(nnz) gather through
+    ``val_src``/``diag_src``; only the new entry data crosses to the
+    device) against the old full rebind (retransfer of every [T, k, W]
+    plan tensor), on the scan backend.
+
+Acceptance (ISSUE 4): vectorized compile >= 10x the reference at N=1e5.
+
+Output: human table + ``repro-bench-rows/v1`` JSON (``--json``), the
+same schema as ``benchmarks.run --json`` / ``benchmarks.serve_load``.
+
+  PYTHONPATH=src:. python -m benchmarks.inspector_bench --json insp.json
+  PYTHONPATH=src:. python -m benchmarks.inspector_bench --smoke  # CI:
+      N=1e4 rows only + the bitwise equivalence assert
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import write_json_rows
+from repro.autotune import scale_corpus_entry
+from repro.backends import get_backend
+from repro.core.plan import (
+    _reference_compile_plan,
+    compile_plan,
+    plans_bitwise_equal,
+)
+from repro.pipeline import schedule
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    narrow_band_lower,
+)
+
+K = 8
+ACCEPT_SPEEDUP = 10.0  # at N=1e5
+
+# family -> N -> matrix factory. The 1e5 points ARE the autotune scale
+# tier's entries (one ground truth — the same matrices the selector's
+# scale-stability test validates); the 1e4 points use the same family
+# parameters at the intermediate size.
+FAMILIES = {
+    "er_sparse": {
+        10_000: lambda: erdos_renyi_lower(10_000, 0.002 * 800 / 10_000,
+                                          seed=201),
+        100_000: scale_corpus_entry("er_sparse_100k").make,
+    },
+    "band_narrow": {
+        10_000: lambda: narrow_band_lower(10_000, 0.14, 10, seed=203),
+        100_000: scale_corpus_entry("band_narrow_100k").make,
+    },
+}
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _bench_point(name: str, L, *, reps_vec: int, reps_ref: int) -> dict:
+    import jax
+
+    dag = dag_from_lower_csr(L)
+    t0 = time.perf_counter()
+    s = schedule(dag, K, strategy="growlocal")
+    t_sched = time.perf_counter() - t0
+
+    plan = compile_plan(L, s)
+    ref = _reference_compile_plan(L, s)
+    equal = plans_bitwise_equal(plan, ref)
+    t_vec = _median_time(lambda: compile_plan(L, s), reps_vec)
+    t_ref = _median_time(lambda: _reference_compile_plan(L, s), reps_ref)
+
+    # numeric update: device-side gather refresh vs full-tensor rebind.
+    # block_until_ready on the refreshed tensors so async dispatch does
+    # not flatter the gather path.
+    backend = get_backend("scan")
+    bound = backend.bind(plan, dtype=np.float32)
+    rng = np.random.default_rng(0)
+    new_data = L.data * rng.uniform(0.5, 2.0, L.nnz)
+
+    def device_update():
+        b2 = bound.update_values(new_data)
+        jax.block_until_ready((b2._pa.vals, b2._pa.diag))
+
+    def full_rebind():
+        plan.numeric_update(new_data)  # the old path mutated the host plan
+        b2 = backend.bind(plan, dtype=np.float32)  # ...then retransferred
+        jax.block_until_ready((b2._pa.vals, b2._pa.diag))
+
+    device_update()  # warm-up: jit the gather kernel for this plan shape
+    full_rebind()
+    t_upd = _median_time(device_update, max(reps_vec, 3))
+    t_rebind = _median_time(full_rebind, max(reps_ref, 2))
+
+    return {
+        "name": name,
+        "n": L.n_rows,
+        "nnz": L.nnz,
+        "n_supersteps": s.n_supersteps,
+        "schedule_seconds": round(t_sched, 4),
+        "compile_vec_seconds": t_vec,
+        "compile_ref_seconds": t_ref,
+        "compile_speedup": t_ref / t_vec,
+        "bitwise_equal": bool(equal),
+        "update_device_seconds": t_upd,
+        "update_rebind_seconds": t_rebind,
+        "update_speedup": t_rebind / t_upd,
+    }
+
+
+def run(csv_rows, *, smoke: bool = False) -> dict:
+    sizes = (10_000,) if smoke else (10_000, 100_000)
+    print(
+        f"# inspector_bench — vectorized compile_plan + device numeric "
+        f"update, k={K}, growlocal ({'smoke: N=1e4 only' if smoke else 'full'})"
+    )
+    print(
+        f"{'matrix':22s} {'nnz':>9s} {'vec ms':>9s} {'ref ms':>10s} "
+        f"{'speedup':>8s} {'equal':>6s} {'upd us':>9s} {'rebind us':>10s} "
+        f"{'upd spd':>8s}"
+    )
+    out = {}
+    all_equal = True
+    speedup_1e5 = []
+    for fam, points in FAMILIES.items():
+        for n in sizes:
+            L = points[n]()
+            tag = f"{fam}.{n // 1000}k"
+            r = _bench_point(
+                tag, L,
+                reps_vec=5 if n <= 10_000 else 3,
+                reps_ref=2 if n <= 10_000 else 1,
+            )
+            out[tag] = r
+            all_equal &= r["bitwise_equal"]
+            if n >= 100_000:
+                speedup_1e5.append(r["compile_speedup"])
+            print(
+                f"{tag:22s} {r['nnz']:9d} {r['compile_vec_seconds']*1e3:9.1f} "
+                f"{r['compile_ref_seconds']*1e3:10.1f} "
+                f"{r['compile_speedup']:7.1f}x {str(r['bitwise_equal']):>6s} "
+                f"{r['update_device_seconds']*1e6:9.1f} "
+                f"{r['update_rebind_seconds']*1e6:10.1f} "
+                f"{r['update_speedup']:7.1f}x"
+            )
+            csv_rows.append(
+                (f"inspector.{tag}.compile_vec",
+                 round(r["compile_vec_seconds"] * 1e6, 1),
+                 round(r["compile_speedup"], 2))
+            )
+            csv_rows.append(
+                (f"inspector.{tag}.compile_ref",
+                 round(r["compile_ref_seconds"] * 1e6, 1), 1.0)
+            )
+            csv_rows.append(
+                (f"inspector.{tag}.update_device",
+                 round(r["update_device_seconds"] * 1e6, 1),
+                 round(r["update_speedup"], 2))
+            )
+            csv_rows.append(
+                (f"inspector.{tag}.update_rebind",
+                 round(r["update_rebind_seconds"] * 1e6, 1), 1.0)
+            )
+    if not all_equal:
+        raise SystemExit(
+            "inspector_bench FAILED: vectorized plan is not bitwise-equal "
+            "to the reference compiler"
+        )
+    print("bitwise equivalence (vectorized vs reference): PASS")
+    if speedup_1e5:
+        worst = min(speedup_1e5)
+        ok = worst >= ACCEPT_SPEEDUP
+        print(
+            f"N=1e5 acceptance (>= {ACCEPT_SPEEDUP:.0f}x compile speedup): "
+            f"{'PASS' if ok else 'MISS'} (worst {worst:.1f}x)"
+        )
+        out["accept_10x_at_1e5"] = bool(ok)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: N=1e4 rows only; still asserts bitwise "
+        "equivalence (exits non-zero on mismatch)",
+    )
+    args = ap.parse_args(argv)
+    csv_rows = []
+    out = run(csv_rows, smoke=args.smoke)
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    if args.json:
+        write_json_rows(args.json, csv_rows, ["inspector"], inspector=out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

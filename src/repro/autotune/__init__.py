@@ -22,6 +22,9 @@ from repro.autotune.corpus import (
     corpus_entry,
     corpus_names,
     independent_lower,
+    scale_corpus_entries,
+    scale_corpus_entry,
+    scale_corpus_names,
     star_lower,
 )
 from repro.autotune.features import (
@@ -50,6 +53,9 @@ __all__ = [
     "corpus_entry",
     "corpus_names",
     "independent_lower",
+    "scale_corpus_entries",
+    "scale_corpus_entry",
+    "scale_corpus_names",
     "star_lower",
     "MatrixFeatures",
     "clear_feature_cache",

@@ -17,6 +17,15 @@ so the selector's calibration, the conformance suite and
 Matrices are sized for the CPU container (n ≈ 400–800); the generators
 scale the same way the benchmark data sets do (benchmarks/common.py).
 
+A second, N >= 1e5 *scale tier* (``scale_corpus_names`` /
+``scale_corpus_entry``) holds the same families scaled to 100k rows —
+ER keeps the expected row degree, the band keeps its (p, B). It
+deliberately does NOT join ``corpus_names()``: the default corpus feeds
+the conformance grid and the serve load generator, which would take the
+100k inspector+compile hit in every cell. The scale tier is consumed by
+the selector's scale-stability test (the ROADMAP N>=1e5 recalibration)
+and ``benchmarks/inspector_bench.py``.
+
 Pathological generators keep |off-diagonal| / |diagonal| ≤ 0.45 so
 forward substitution is well conditioned even on an n-long chain
 (error growth ~ 0.45^distance instead of the paper value distribution's
@@ -30,7 +39,7 @@ from typing import Callable, Dict, Tuple
 
 import numpy as np
 
-from repro.sparse.csr import CSRMatrix, csr_from_coo
+from repro.sparse.csr import CSRMatrix, csr_from_coo, lower_triangle_of
 from repro.sparse.generators import (
     erdos_renyi_lower,
     narrow_band_lower,
@@ -175,9 +184,72 @@ _entry(
 )
 
 
+# -- N >= 1e5 scale tier (see module docstring) -----------------------------
+# ``expected_best`` here is indicative (the regime's shortlist leaders),
+# not re-derived at scale by the container tests — scheduling 100k-row
+# matrices across all 7 strategies is benchmark territory, not tier-1.
+_SCALE_N = 100_000
+_SCALE_ENTRIES: Dict[str, CorpusEntry] = {}
+
+
+def _scale_entry(name, make, regime, expected_best, description):
+    _SCALE_ENTRIES[name] = CorpusEntry(
+        name=name, make=make, regime=regime,
+        expected_best=tuple(expected_best), description=description,
+    )
+
+
+_scale_entry(
+    "er_sparse_100k",
+    lambda: erdos_renyi_lower(_SCALE_N, 0.002 * 800 / _SCALE_N, seed=201),
+    regime="wide",
+    expected_best=("hdagg",),
+    description="ER n=100k, row degree matched to er_sparse — shallow, wide",
+)
+_scale_entry(
+    "er_dense_100k",
+    lambda: erdos_renyi_lower(_SCALE_N, 0.03 * 500 / _SCALE_N, seed=202),
+    regime="wide",
+    expected_best=("hdagg", "growlocal"),
+    description="ER n=100k, row degree matched to er_dense — deep but every "
+    "level is thousands wide, so barriers amortize at this scale",
+)
+_scale_entry(
+    "band_narrow_100k",
+    lambda: narrow_band_lower(_SCALE_N, 0.14, 10, seed=203),
+    regime="banded",
+    expected_best=("growlocal", "serial"),
+    description="band n=100k p=0.14 B=10 — same (p, B) as band_narrow; "
+    "thousands of wavefronts, locality-bound",
+)
+_scale_entry(
+    "poisson2d_100k",
+    lambda: lower_triangle_of(poisson2d_matrix(317)),
+    regime="banded",
+    expected_best=("growlocal", "funnel-gl", "serial"),
+    description="lower triangle of 317x317 Poisson (n=100489) — FEM-style "
+    "banded structure at paper scale",
+)
+_scale_entry(
+    "chain_100k",
+    lambda: chain_lower(_SCALE_N, seed=205),
+    regime="serial",
+    expected_best=("serial", "growlocal"),
+    description="pure chain n=100k — zero parallelism at any scale",
+)
+_scale_entry(
+    "independent_100k",
+    lambda: independent_lower(_SCALE_N, seed=207),
+    regime="wide",
+    expected_best=("hdagg", "spmp", "wavefront"),
+    description="diagonal n=100k — depth 1, embarrassingly parallel",
+)
+
+
 @lru_cache(maxsize=None)
 def _corpus_matrix(name: str) -> CSRMatrix:
-    return _ENTRIES[name].make()
+    entry = _ENTRIES.get(name) or _SCALE_ENTRIES[name]
+    return entry.make()
 
 
 def corpus_names() -> Tuple[str, ...]:
@@ -194,4 +266,22 @@ def corpus_entry(name: str) -> CorpusEntry:
     except KeyError:
         raise KeyError(
             f"unknown corpus matrix {name!r}; available: {corpus_names()}"
+        ) from None
+
+
+def scale_corpus_names() -> Tuple[str, ...]:
+    return tuple(_SCALE_ENTRIES)
+
+
+def scale_corpus_entries() -> Tuple[CorpusEntry, ...]:
+    return tuple(_SCALE_ENTRIES.values())
+
+
+def scale_corpus_entry(name: str) -> CorpusEntry:
+    try:
+        return _SCALE_ENTRIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scale-corpus matrix {name!r}; available: "
+            f"{scale_corpus_names()}"
         ) from None

@@ -9,13 +9,14 @@ Two stages, both inspectable:
     (``autotune.corpus``; thresholds re-checked by
     ``tests/test_autotune.py``):
 
-      regime     trigger (features f, cores k)            candidates
+      regime     trigger (features f, cores k, in order)   candidates
       ---------  ----------------------------------------  ----------------
       serial     f.avg_wavefront < 2  or  f.n <= 64        serial, growlocal
-      wide       f.depth <= 8  or  f.avg_wavefront >= 8k   hdagg, growlocal,
+      wide       f.depth <= 8                              hdagg, growlocal,
                                                            serial
-      banded     f.mean_band <= 0.1 * f.n                  growlocal, serial,
+      banded     0 < f.mean_band <= 0.1 * f.n              growlocal, serial,
                                                            funnel-gl
+      wide       f.avg_wavefront >= 8k                     (as above)
       mixed      everything else                           growlocal,
                                                            funnel-gl, serial
 
@@ -25,6 +26,17 @@ Two stages, both inspectable:
     wide enough to balance; locality-friendly banded/FEM DAGs are
     GrowLocal/Funnel territory (the paper's headline regime); the funnel
     coarsening only pays off when there is depth to collapse.
+
+    The rule ORDER is part of the N>=1e5 recalibration (ROADMAP): the
+    locality rule must fire before the wavefront-width rule because
+    ``avg_wavefront >= 8k`` stops implying "few barriers" at scale — a
+    deep narrow-band DAG at N=1e5 has avg_wavefront ~ 80 yet thousands
+    of L-costed supersteps, so it must stay "banded". The depth <= 8
+    trigger (definitionally shallow) still precedes it, and the banded
+    rule requires mean_band > 0 so edge-free (fully parallel) DAGs keep
+    classifying "wide". Scale stability is asserted by
+    ``tests/test_autotune.py::test_classify_stable_at_scale`` over the
+    ``scale_corpus`` tier (``autotune.corpus``).
 
 2.  ``select_schedule`` runs every shortlisted candidate and scores it
     with the exact §2.2 objective ``bsp_cost(dag, s, L)`` — the model the
@@ -93,13 +105,16 @@ class Selection:
 
 
 def classify(f: MatrixFeatures, k: int = 8) -> str:
-    """Map features to a regime label (see module docstring table)."""
+    """Map features to a regime label (see module docstring table — the
+    rule order matters and is part of the N>=1e5 recalibration)."""
     if f.avg_wavefront < 2.0 or f.n <= 64:
         return "serial"
-    if f.depth <= 8 or f.avg_wavefront >= 8 * max(k, 1):
+    if f.depth <= 8:
         return "wide"
-    if f.mean_band <= 0.1 * f.n:
+    if 0.0 < f.mean_band <= 0.1 * f.n:
         return "banded"
+    if f.avg_wavefront >= 8 * max(k, 1):
+        return "wide"
     return "mixed"
 
 
@@ -192,12 +207,16 @@ def _binding_key(plan_kwargs: Optional[dict]) -> tuple:
     """The plan_kwargs that influence measured-trial timings (tune=True):
     two bindings that compile differently must not share a tuned pick.
     Delegates to the same ``binding_fingerprint`` that keys the plan
-    cache, so the two identities can never drift apart."""
+    cache, so the two identities can never drift apart. The backend name
+    is resolved against ``repro.backends.registry`` — measured trials run
+    on whatever backend the registry serves for that name, so an unknown
+    name fails here instead of inside a half-timed trial."""
+    from repro.backends import get_backend
     from repro.pipeline.solver import binding_fingerprint
 
     pk = plan_kwargs or {}
     return binding_fingerprint(
-        backend=pk.get("backend", "scan"),
+        backend=get_backend(pk.get("backend", "scan")).name,
         dtype=pk.get("dtype", np.float32),
         width=pk.get("width"),
         steps_per_tile=pk.get("steps_per_tile", 8),

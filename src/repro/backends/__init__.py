@@ -1,0 +1,51 @@
+"""``repro.backends`` — execution backends behind one protocol.
+
+Every way this repo can execute a compiled ``ExecPlan`` — the single-chip
+`lax.scan` executor, the Pallas TPU kernel, the shard_map distributed
+solver — is a ``Backend`` registered here and bound through one call:
+
+    from repro.backends import get_backend
+
+    bound = get_backend("scan").bind(exec_plan, dtype=np.float32)
+    x = bound.solve(b)                       # f[n] or f[n, m]
+    bound2 = bound.update_values(new_data)   # device-side refresh, O(nnz)
+    print(bound.describe())                  # telemetry for bench/serve
+
+``TriangularSolver``, the conformance grid, the autotuner's measured
+trials and serve telemetry all iterate this registry — adding a backend
+(e.g. a mesh-sharded serve binding) is one ``register_backend`` call.
+
+Module map:
+
+  * ``base``        — ``Backend`` / ``BoundSolve`` protocol +
+                      ``masked_value_gather`` (the shared device refresh)
+  * ``registry``    — ``register_backend`` / ``get_backend`` /
+                      ``available_backends``
+  * ``scan``        — single-chip `lax.scan` executor binding
+  * ``pallas``      — Pallas TPU kernel binding (interpret mode on CPU)
+  * ``distributed`` — shard_map mesh binding (requires ``mesh=``)
+"""
+from repro.backends.base import Backend, BoundSolve, masked_value_gather
+from repro.backends.registry import (
+    available_backends,
+    bind,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
+
+# importing the built-in implementations registers them (in this order)
+from repro.backends import scan as _scan  # noqa: E402,F401
+from repro.backends import pallas as _pallas  # noqa: E402,F401
+from repro.backends import distributed as _distributed  # noqa: E402,F401
+
+__all__ = [
+    "Backend",
+    "BoundSolve",
+    "masked_value_gather",
+    "available_backends",
+    "bind",
+    "get_backend",
+    "register_backend",
+    "unregister_backend",
+]

@@ -1,0 +1,151 @@
+"""The execution-backend protocol: ``Backend.bind(plan) -> BoundSolve``.
+
+One contract replaces the three divergent device-tensor conversions that
+used to live in ``solver/executor.py`` (scan), ``kernels/ops.py``
+(pallas tile setup) and ``solver/distributed.py`` (mesh sharding), and
+the ``if/elif`` binding block in ``pipeline/solver.py``:
+
+  * ``Backend`` — a named, stateless factory. ``bind(exec_plan,
+    **params)`` transfers the plan tensors to the device(s) once and
+    returns a ``BoundSolve``. Binding parameters every backend receives
+    (and ignores if irrelevant): ``dtype``, ``steps_per_tile``,
+    ``interpret``, ``mesh``.
+  * ``BoundSolve`` — an immutable bound solver:
+      - ``solve(b)`` for ``b`` f[n] or f[n, m] (multi-RHS);
+      - ``update_values(data) -> BoundSolve`` refreshes the numeric
+        values *on device* — a gather of the new entry data through the
+        plan's ``val_src``/``diag_src`` maps — and returns a NEW bound
+        solve sharing the (read-only) index tensors. The old bound keeps
+        serving in-flight work untouched (the live-refactorization
+        primitive ``repro.serve`` version-swaps on), and nothing
+        round-trips the full [T, k, W] plan tensors through host memory;
+      - ``describe()`` — a JSON-ready dict for bench/serve telemetry.
+
+The value contract ``update_values`` must honor (conformance-tested on
+every registered backend): a solve after ``update_values(data)`` is
+bitwise-identical to a solve on a fresh ``bind`` of a plan compiled from
+the same pattern with ``data``.
+
+Register implementations with ``repro.backends.register_backend``; every
+consumer (``TriangularSolver``, the conformance grid, the autotuner's
+trial runner, serve telemetry) iterates the registry, so a new backend is
+one registry entry — never another ``elif``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Tuple
+
+import numpy as np
+
+
+def _masked_value_gather_jit():
+    """Build (once) the jitted gather+mask kernel — jit fuses the two
+    gathers and selects into one pass per tensor instead of four eager
+    dispatches, and the compiled variant is cached per plan shape."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def gather(data, val_src, vals_old, diag_src, diag_old):
+        # negative indices are masked by the where(); jax clamps them in
+        # the gather, so no out-of-bounds access happens either way
+        vals = jnp.where(val_src >= 0, data[val_src], vals_old)
+        diag = jnp.where(diag_src >= 0, data[diag_src], diag_old)
+        return vals, diag
+
+    return gather
+
+
+_GATHER = None
+
+
+def masked_value_gather(data, val_src, vals_old, diag_src, diag_old):
+    """The shared device-side numeric refresh: gather ``data`` (the new
+    matrix's entry values, already cast to the plan dtype) through the
+    source maps, keeping the old value wherever the map says padding
+    (``src < 0``). Returns ``(vals, diag)`` as new device arrays.
+
+    Bitwise-identical to the host path (``ExecPlan.numeric_update`` +
+    retransfer): the f64 -> plan-dtype cast happens per element on the
+    host, and the gather itself moves bits unchanged; padding slots keep
+    their original contents exactly as the in-place host mutate does.
+    """
+    global _GATHER
+    if _GATHER is None:
+        _GATHER = _masked_value_gather_jit()
+    return _GATHER(data, val_src, vals_old, diag_src, diag_old)
+
+
+def expected_entry_count(exec_plan) -> int:
+    """Length the ``update_values`` data vector must have: the planned
+    pattern's entry count, recovered from the source maps (every stored
+    entry of a full-diagonal matrix is referenced by exactly one of
+    them, so the max index + 1 is the nnz)."""
+    hi = -1
+    if exec_plan.val_src is not None and exec_plan.val_src.size:
+        hi = max(hi, int(exec_plan.val_src.max()))
+    if exec_plan.diag_src is not None and exec_plan.diag_src.size:
+        hi = max(hi, int(exec_plan.diag_src.max()))
+    return hi + 1
+
+
+class BoundSolve(abc.ABC):
+    """A plan bound to one execution backend. Immutable: value refreshes
+    return a new instance (see module docstring)."""
+
+    backend: str  # registry name of the backend that produced this
+    n: int  # problem size (scratch row excluded)
+    n_entries: int  # entry count update_values data must match
+
+    def _check_data(self, data: np.ndarray) -> np.ndarray:
+        """Reject mis-sized update data. The device gather clamps
+        out-of-range indices (same hazard solve() guards against for b),
+        so without this check a wrong-pattern data vector would silently
+        produce garbage values instead of raising."""
+        data = np.asarray(data)
+        if data.ndim != 1 or data.shape[0] != self.n_entries:
+            raise ValueError(
+                f"update_values expects the planned pattern's entry data "
+                f"f[{self.n_entries}]; got shape {data.shape}"
+            )
+        return data
+
+    @abc.abstractmethod
+    def solve(self, b):
+        """Solve for ``b`` f[n] or f[n, m]; returns x shaped like b."""
+
+    @abc.abstractmethod
+    def update_values(self, data: np.ndarray) -> "BoundSolve":
+        """Device-side numeric refresh from ``data`` (the ``.data`` of a
+        matrix with the planned pattern, in plan entry order). Returns a
+        NEW BoundSolve sharing index tensors; self is untouched."""
+
+    @abc.abstractmethod
+    def describe(self) -> dict:
+        """JSON-ready binding telemetry (backend, shapes, device bytes)."""
+
+
+class Backend(abc.ABC):
+    """A named execution backend — a ``BoundSolve`` factory."""
+
+    name: str
+
+    @abc.abstractmethod
+    def bind(
+        self,
+        exec_plan,
+        *,
+        dtype=np.float32,
+        steps_per_tile: int = 8,
+        interpret=None,
+        mesh=None,
+    ) -> BoundSolve:
+        """Transfer ``exec_plan``'s tensors and return a ``BoundSolve``.
+        Irrelevant parameters are accepted and ignored so callers can
+        pass one uniform binding-parameter set to every backend."""
+
+    def requires(self) -> Tuple[str, ...]:
+        """Names of binding params this backend cannot run without
+        (e.g. ``("mesh",)`` for the distributed backend)."""
+        return ()

@@ -1,0 +1,189 @@
+"""Distributed backend — the shard_map BSP executor behind the
+``Backend`` protocol (device work in ``repro.solver.distributed``).
+
+The k schedule cores are k devices on the mesh's ``model`` axis; the RHS
+batch shards over ``data``. The jitted sharded solve is cached per padded
+batch size, and that cache is SHARED across ``update_values`` clones —
+the lowered graph is shape-only, so a live refactorization never
+recompiles, it only swaps the value operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.backends.base import (
+    Backend,
+    BoundSolve,
+    expected_entry_count,
+    masked_value_gather,
+)
+from repro.backends.registry import register_backend
+
+
+class DistributedBoundSolve(BoundSolve):
+    backend = "distributed"
+
+    def __init__(self, spec, mesh, args, val_src, diag_src, np_dtype,
+                 n_entries, jitted=None, jit_lock=None):
+        # args = (row_ids, col_idx, vals, diag, accum_mask) device arrays
+        self._spec = spec  # solver.distributed.DistPlanSpec (batch unset)
+        self._mesh = mesh
+        self._args = args
+        self._val_src = val_src
+        self._diag_src = diag_src
+        self._np_dtype = np_dtype
+        # padded-batch -> jitted solve; shape-only, shared across value
+        # refreshes so serve version swaps reuse every compiled variant.
+        # The lock rides along with it: serve worker threads insert while
+        # telemetry threads snapshot (describe()).
+        self._jitted = {} if jitted is None else jitted
+        self._jit_lock = threading.Lock() if jit_lock is None else jit_lock
+        self.n = spec.n
+        self.n_entries = n_entries
+
+    def solve(self, b):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.solver.distributed import build_distributed_solver
+
+        b2 = np.asarray(b)
+        single = b2.ndim == 1
+        b2 = b2[None, :] if single else np.ascontiguousarray(b2.T)
+        B = b2.shape[0]
+        # the batch shards over 'data': pad it to a multiple
+        data_ax = self._mesh.shape["data"]
+        Bp = -(-B // data_ax) * data_ax
+        b2 = np.concatenate([b2, np.zeros((Bp - B, b2.shape[1]), b2.dtype)])
+        b_pad = np.concatenate([b2, np.zeros((Bp, 1), b2.dtype)], axis=1)
+        with self._jit_lock:
+            fn = self._jitted.get(Bp)
+        if fn is None:
+            spec = dataclasses.replace(self._spec, batch=Bp)
+            fn = jax.jit(build_distributed_solver(spec, self._mesh))
+            with self._jit_lock:
+                fn = self._jitted.setdefault(Bp, fn)
+        with self._mesh:
+            x = fn(*self._args, jnp.asarray(b_pad, self._np_dtype))
+        x = np.asarray(x)[:, : self.n]
+        return jnp.asarray(x[0] if single else x[:B].T)
+
+    def update_values(self, data: np.ndarray) -> "DistributedBoundSolve":
+        import jax.numpy as jnp
+
+        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
+        row_ids, col_idx, vals, diag, accum = self._args
+        vals, diag = masked_value_gather(
+            data, self._val_src, vals, self._diag_src, diag
+        )
+        return DistributedBoundSolve(
+            self._spec,
+            self._mesh,
+            (row_ids, col_idx, vals, diag, accum),
+            self._val_src,
+            self._diag_src,
+            self._np_dtype,
+            self.n_entries,
+            jitted=self._jitted,  # shapes unchanged -> reuse compilations
+            jit_lock=self._jit_lock,
+        )
+
+    def describe(self) -> dict:
+        with self._jit_lock:  # solve() may be inserting concurrently
+            compiled = sorted(self._jitted)
+        return {
+            "backend": self.backend,
+            "n": self.n,
+            "n_steps": self._spec.T,
+            "k": self._spec.k,
+            "W": self._spec.W,
+            "n_supersteps": len(self._spec.step_bounds) - 1,
+            "dtype": np.dtype(self._np_dtype).name,
+            "mesh": dict(self._mesh.shape),
+            "compiled_batch_sizes": compiled,
+            "device_bytes": int(
+                sum(a.size * a.dtype.itemsize
+                    for a in self._args + (self._val_src, self._diag_src))
+            ),
+        }
+
+
+def _pad_cores(plan, model_ax: int):
+    """Pad the plan's core axis UP to the mesh's ``model`` axis size so
+    narrower schedules (e.g. serial's k=1 chains) shard cleanly — the
+    executor assigns exactly one schedule core per model-axis device, so
+    k must end up equal to it. A plan with MORE cores than devices
+    cannot be executed (each device's scan walks one chain) and is
+    rejected with a clear error instead of failing at trace time.
+    Padding lanes follow the plan's own protocol — row id n (scratch),
+    self-gathers, val 0 / diag 1, source maps -1 — so they compute
+    harmless writes to the scratch slot."""
+    k, kp = plan.k, model_ax
+    if k > model_ax:
+        raise ValueError(
+            f"distributed backend: plan has k={k} schedule cores but the "
+            f"mesh 'model' axis has only {model_ax} devices — schedule "
+            f"with k <= mesh.shape['model'] (one core per device)"
+        )
+    if kp == k:
+        return plan
+    T, pad = plan.n_steps, kp - k
+
+    def padk(a, fill):
+        block = np.full((T, pad, *a.shape[2:]), fill, dtype=a.dtype)
+        return np.concatenate([a, block], axis=1)
+
+    return dataclasses.replace(
+        plan,
+        k=kp,
+        row_ids=padk(plan.row_ids, plan.n),
+        col_idx=padk(plan.col_idx, plan.n),
+        vals=padk(plan.vals, 0),
+        diag=padk(plan.diag, 1),
+        accum=padk(plan.accum, False),
+        val_src=None if plan.val_src is None else padk(plan.val_src, -1),
+        diag_src=None if plan.diag_src is None else padk(plan.diag_src, -1),
+    )
+
+
+@register_backend
+class DistributedBackend(Backend):
+    """BSP on a device mesh: one all-gather barrier per superstep."""
+
+    name = "distributed"
+
+    def requires(self):
+        return ("mesh",)
+
+    def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
+             interpret=None, mesh=None) -> DistributedBoundSolve:
+        import jax.numpy as jnp
+
+        from repro.solver.distributed import dist_plan_spec
+
+        del steps_per_tile, interpret  # no tiling; shard_map handles layout
+        if mesh is None:
+            raise ValueError("backend='distributed' requires a mesh")
+        np_dtype = np.dtype(dtype)
+        exec_plan = _pad_cores(exec_plan, mesh.shape["model"])
+        spec = dist_plan_spec(exec_plan, batch=0, dtype=np_dtype)
+        args = (
+            jnp.asarray(exec_plan.row_ids, jnp.int32),
+            jnp.asarray(exec_plan.col_idx, jnp.int32),
+            jnp.asarray(exec_plan.vals, np_dtype),
+            jnp.asarray(exec_plan.diag, np_dtype),
+            jnp.asarray(exec_plan.accum.astype(np_dtype)),
+        )
+        assert exec_plan.val_src is not None and exec_plan.diag_src is not None
+        return DistributedBoundSolve(
+            spec,
+            mesh,
+            args,
+            jnp.asarray(exec_plan.val_src, jnp.int32),
+            jnp.asarray(exec_plan.diag_src, jnp.int32),
+            np_dtype,
+            expected_entry_count(exec_plan),
+        )

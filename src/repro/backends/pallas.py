@@ -1,0 +1,114 @@
+"""Pallas backend — the TPU kernel executor behind the ``Backend``
+protocol (kernel in ``repro.kernels.sptrsv``, tile padding shared with
+``repro.kernels.ops``)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.backends.base import (
+    Backend,
+    BoundSolve,
+    expected_entry_count,
+    masked_value_gather,
+)
+from repro.backends.registry import register_backend
+
+
+class PallasBoundSolve(BoundSolve):
+    backend = "pallas"
+
+    def __init__(self, arrays, val_src, diag_src, *, n, n_entries,
+                 np_dtype, steps_per_tile, interpret):
+        # arrays = (row_ids, col_idx, vals, diag, accum_mask), tile-padded
+        self._arrays = arrays
+        self._val_src = val_src  # int32[T_pad, k, W] device (-1 padded)
+        self._diag_src = diag_src  # int32[T_pad, k] device (-1 padded)
+        self.n = n
+        self.n_entries = n_entries
+        self._np_dtype = np_dtype
+        self._steps_per_tile = steps_per_tile
+        self._interpret = interpret
+
+    def solve(self, b):
+        from repro.kernels.ops import solve_with_kernel_arrays
+
+        return solve_with_kernel_arrays(
+            self._arrays, b, n=self.n,
+            steps_per_tile=self._steps_per_tile,
+            interpret=self._interpret, dtype=self._np_dtype,
+        )
+
+    def update_values(self, data: np.ndarray) -> "PallasBoundSolve":
+        import jax.numpy as jnp
+
+        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
+        row_ids, col_idx, vals, diag, accum = self._arrays
+        vals, diag = masked_value_gather(
+            data, self._val_src, vals, self._diag_src, diag
+        )
+        return PallasBoundSolve(
+            (row_ids, col_idx, vals, diag, accum),
+            self._val_src,
+            self._diag_src,
+            n=self.n,
+            n_entries=self.n_entries,
+            np_dtype=self._np_dtype,
+            steps_per_tile=self._steps_per_tile,
+            interpret=self._interpret,
+        )
+
+    def describe(self) -> dict:
+        T, k = self._arrays[0].shape
+        W = self._arrays[1].shape[-1]
+        return {
+            "backend": self.backend,
+            "n": self.n,
+            "n_steps": T,  # tile-padded
+            "k": k,
+            "W": W,
+            "dtype": np.dtype(self._np_dtype).name,
+            "steps_per_tile": self._steps_per_tile,
+            "interpret": bool(self._interpret),
+            "device_bytes": int(
+                sum(a.size * a.dtype.itemsize
+                    for a in self._arrays + (self._val_src, self._diag_src))
+            ),
+        }
+
+
+@register_backend
+class PallasBackend(Backend):
+    """Grid-of-tiles Pallas kernel; x resident in VMEM, plan tensors
+    streamed per tile. Interpret mode (CPU) executes the same kernel
+    logic through the Pallas interpreter."""
+
+    name = "pallas"
+
+    def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
+             interpret=None, mesh=None) -> PallasBoundSolve:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _pad_steps, kernel_plan_arrays
+
+        del mesh  # single-chip kernel
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        arrays = kernel_plan_arrays(
+            exec_plan, steps_per_tile=steps_per_tile, dtype=dtype
+        )
+        assert exec_plan.val_src is not None and exec_plan.diag_src is not None
+        # source maps ride the same tile padding; -1 marks padding slots so
+        # device-side refreshes leave them untouched
+        val_src = _pad_steps(exec_plan.val_src, steps_per_tile, -1)
+        diag_src = _pad_steps(exec_plan.diag_src, steps_per_tile, -1)
+        return PallasBoundSolve(
+            arrays,
+            jnp.asarray(val_src, jnp.int32),
+            jnp.asarray(diag_src, jnp.int32),
+            n=exec_plan.n,
+            n_entries=expected_entry_count(exec_plan),
+            np_dtype=np.dtype(dtype),
+            steps_per_tile=steps_per_tile,
+            interpret=interpret,
+        )

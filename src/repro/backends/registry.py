@@ -1,0 +1,67 @@
+"""Backend registry — the single source of truth for execution backends.
+
+Every consumer that used to hard-code backend strings iterates this
+registry instead: ``TriangularSolver._bind``, the conformance grid, the
+autotuner's ``tune=True`` trial runner, and serve telemetry. Registering
+a backend makes it reachable from all of them at once:
+
+    from repro.backends import Backend, register_backend
+
+    @register_backend
+    class MeshShardedServe(Backend):
+        name = "mesh-serve"
+        def bind(self, exec_plan, **params): ...
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Tuple
+
+from repro.backends.base import Backend, BoundSolve
+
+_LOCK = threading.Lock()
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend_cls):
+    """Class decorator (or plain call) registering a ``Backend``. The
+    class is instantiated once; its ``name`` attribute is the registry
+    key. Duplicate names are rejected — shadowing an existing backend
+    silently would change what every consumer binds."""
+    instance = backend_cls() if isinstance(backend_cls, type) else backend_cls
+    name = getattr(instance, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError("backend must define a non-empty string `name`")
+    with _LOCK:
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = instance
+    return backend_cls
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registry entry (tests cleaning up custom backends)."""
+    with _LOCK:
+        _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    with _LOCK:
+        backend = _REGISTRY.get(name)
+    if backend is None:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {available_backends()}"
+        )
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Registered backend names, in registration order (the built-ins
+    register as scan, pallas, distributed on package import)."""
+    with _LOCK:
+        return tuple(_REGISTRY)
+
+
+def bind(name: str, exec_plan, **params) -> BoundSolve:
+    """Convenience: ``get_backend(name).bind(exec_plan, **params)``."""
+    return get_backend(name).bind(exec_plan, **params)

@@ -1,0 +1,87 @@
+"""Scan backend — the single-chip `lax.scan` executor behind the
+``Backend`` protocol (device work in ``repro.solver.executor``)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.backends.base import (
+    Backend,
+    BoundSolve,
+    expected_entry_count,
+    masked_value_gather,
+)
+from repro.backends.registry import register_backend
+
+
+class ScanBoundSolve(BoundSolve):
+    backend = "scan"
+
+    def __init__(self, pa, val_src, diag_src, np_dtype, n_entries):
+        self._pa = pa  # solver.executor.PlanArrays (device-resident)
+        self._val_src = val_src  # int32[T, k, W] device
+        self._diag_src = diag_src  # int32[T, k] device
+        self._np_dtype = np_dtype
+        self.n = pa.n
+        self.n_entries = n_entries
+
+    def solve(self, b):
+        from repro.solver.executor import solve_with_plan
+
+        return solve_with_plan(self._pa, b)
+
+    def update_values(self, data: np.ndarray) -> "ScanBoundSolve":
+        import jax.numpy as jnp
+
+        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
+        vals, diag = masked_value_gather(
+            data, self._val_src, self._pa.vals, self._diag_src, self._pa.diag
+        )
+        new = ScanBoundSolve(
+            self._pa._replace(vals=vals, diag=diag),
+            self._val_src,  # index tensors shared, read-only
+            self._diag_src,
+            self._np_dtype,
+            self.n_entries,
+        )
+        return new
+
+    def describe(self) -> dict:
+        T, k = self._pa.row_ids.shape
+        W = self._pa.col_idx.shape[-1]
+        return {
+            "backend": self.backend,
+            "n": self.n,
+            "n_steps": T,
+            "k": k,
+            "W": W,
+            "dtype": np.dtype(self._np_dtype).name,
+            "device_bytes": int(
+                sum(a.size * a.dtype.itemsize
+                    for a in self._pa[:5] + (self._val_src, self._diag_src))
+            ),
+        }
+
+
+@register_backend
+class ScanBackend(Backend):
+    """One `lax.scan` over the plan; superstep barriers are free on a
+    single chip, so `step_bounds` is ignored here."""
+
+    name = "scan"
+
+    def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
+             interpret=None, mesh=None) -> ScanBoundSolve:
+        import jax.numpy as jnp
+
+        from repro.solver.executor import plan_arrays
+
+        del steps_per_tile, interpret, mesh  # scan has no tiling or mesh
+        pa = plan_arrays(exec_plan, dtype=dtype)
+        assert exec_plan.val_src is not None and exec_plan.diag_src is not None
+        return ScanBoundSolve(
+            pa,
+            jnp.asarray(exec_plan.val_src, jnp.int32),
+            jnp.asarray(exec_plan.diag_src, jnp.int32),
+            np.dtype(dtype),
+            expected_entry_count(exec_plan),
+        )

@@ -21,6 +21,14 @@ per-plan maximum; rows wider than W are split into multiple *virtual rows*
 (partial-sum rows that accumulate into the same x slot — the last virtual row
 finishes with the diagonal division). The plan compiler reports padding
 efficiency; the §Perf loop iterates on it.
+
+Compilation is the paper's *inspector* phase (§7.7 amortizes it over many
+executes), so it must be O(nnz), not O(n) Python iterations:
+``compile_plan`` is pure NumPy array passes — virtual-row expansion via
+``repeat``/``cumsum`` segment arithmetic and one bulk scatter per plan
+tensor. The original per-row compiler is kept as
+``_reference_compile_plan``; ``tests/test_plan_vectorized.py`` and
+``benchmarks/inspector_bench.py`` assert the two are bitwise-identical.
 """
 from __future__ import annotations
 
@@ -49,7 +57,8 @@ class ExecPlan:
 
     ``val_src``/``diag_src`` let a caller refresh the numeric values for a
     new matrix with the *same* sparsity pattern without recompiling — the
-    plan-cache ``numeric_update`` path.
+    plan-cache ``numeric_update`` path (and, device-side, the
+    ``repro.backends`` ``BoundSolve.update_values`` gather).
     """
 
     n: int
@@ -86,7 +95,14 @@ class ExecPlan:
     def stats(self) -> dict:
         real = self.row_ids != self.n
         nnz_slots = self.col_idx.shape[0] * self.k * self.W
-        real_nnz = int((self.vals != 0).sum())
+        # count populated slots from the value-source map, not from
+        # (vals != 0): a factor may legitimately store explicit zeros, and
+        # a padding slot may transiently hold a zero from numeric_update —
+        # val_src >= 0 is the structural truth
+        if self.val_src is not None:
+            real_nnz = int((self.val_src >= 0).sum())
+        else:  # plans built without source maps fall back to the value test
+            real_nnz = int((self.vals != 0).sum())
         return {
             "n_steps": self.n_steps,
             "n_supersteps": self.n_supersteps,
@@ -101,6 +117,15 @@ class ExecPlan:
         }
 
 
+def _resolve_width(row_nnz_off: np.ndarray, n: int, width: int | None) -> int:
+    """Default W: 95th percentile of off-diagonal row nnz, clipped to
+    [4, 512] (wide rows are split, narrow rows padded; §Perf tunes this)."""
+    if width is None:
+        width = int(np.clip(np.percentile(row_nnz_off, 95) if n else 4, 4, 512))
+        width = max(width, 1)
+    return int(width)
+
+
 def compile_plan(
     L: CSRMatrix,
     sched: Schedule,
@@ -108,18 +133,124 @@ def compile_plan(
     width: int | None = None,
     dtype=np.float32,
 ) -> ExecPlan:
-    """Compile (matrix, schedule) into an ExecPlan.
+    """Compile (matrix, schedule) into an ExecPlan — vectorized inspector.
 
-    ``width``: max off-diagonal entries per virtual row (W). Defaults to the
-    95th percentile of row nnz (clipped to [4, 512]) — wide rows are split,
-    narrow rows padded; the §Perf loop tunes this."""
+    O(nnz) NumPy passes, no per-row Python: the schedule order comes from
+    one lexsort, virtual rows from a ``repeat``/``cumsum`` expansion, and
+    each plan tensor is filled by a single bulk scatter. Bitwise-identical
+    to ``_reference_compile_plan`` (property-tested across the scenario
+    corpus).
+
+    ``width``: max off-diagonal entries per virtual row (W); see
+    ``_resolve_width`` for the default.
+    """
     n, k = L.n_rows, sched.k
     row_nnz_off = L.row_nnz() - 1  # off-diagonal count (diag always present)
     assert (row_nnz_off >= 0).all(), "matrix must have a full diagonal"
-    if width is None:
-        width = int(np.clip(np.percentile(row_nnz_off, 95) if n else 4, 4, 512))
-        width = max(width, 1)
-    W = int(width)
+    W = _resolve_width(row_nnz_off, n, width)
+    S = sched.n_supersteps
+    diag_vals = L.diagonal()
+
+    # -- schedule order: vertices grouped by (superstep, core), chain order
+    # (the same stable lexsort Schedule.chains() uses, minus the dict)
+    order = np.lexsort((sched.rank, sched.pi, sched.sigma))
+
+    # -- virtual-row expansion: vertex v becomes ceil(off_nnz/W) rows ------
+    segs = np.maximum(1, -(-row_nnz_off // W)).astype(np.int64)
+    segs_o = segs[order]
+    vr_v = np.repeat(order, segs_o)  # vertex of each virtual row
+    starts = np.cumsum(segs_o) - segs_o  # first virtual row per vertex
+    vr_g = np.arange(len(vr_v), dtype=np.int64) - np.repeat(starts, segs_o)
+    vr_last = vr_g == segs[vr_v] - 1
+
+    # -- chain position of each virtual row within its (superstep, core) --
+    key = sched.sigma[vr_v].astype(np.int64) * k + sched.pi[vr_v]
+    group_len = np.bincount(key, minlength=S * k)  # sorted by construction
+    group_start = np.cumsum(group_len) - group_len
+    t_in_chain = np.arange(len(vr_v), dtype=np.int64) - group_start[key]
+
+    # superstep step count = max chain length over its k cores
+    chain_len = group_len.reshape(S, k)
+    step_bounds = np.zeros(S + 1, dtype=np.int64)
+    np.cumsum(chain_len.max(axis=1), out=step_bounds[1:])
+    T = int(step_bounds[-1])
+
+    # flat (step, core) slot of every virtual row
+    slot = (step_bounds[sched.sigma[vr_v]] + t_in_chain) * k + sched.pi[vr_v]
+
+    # -- row-level tensors: one scatter each ------------------------------
+    row_ids = np.full(T * k, n, dtype=np.int32)
+    row_ids[slot] = vr_v
+    diag = np.ones(T * k, dtype=dtype)
+    diag[slot] = diag_vals[vr_v]
+    accum = np.zeros(T * k, dtype=bool)
+    accum[slot] = ~vr_last
+
+    # first diagonal entry id per row (reverse scatter keeps the first)
+    rows_of_entry = L.row_of_entry()
+    off_mask = L.indices != rows_of_entry
+    diag_entry = np.full(n, -1, dtype=np.int64)
+    d_ids = np.nonzero(~off_mask)[0]
+    diag_entry[rows_of_entry[d_ids[::-1]]] = d_ids[::-1]
+    diag_src = np.full(T * k, -1, dtype=np.int32)
+    diag_src[slot] = diag_entry[vr_v]
+
+    # -- entry-level tensors: off-diagonal entries, row-major -------------
+    off_entries = np.nonzero(off_mask)[0]  # entry ids grouped by row
+    n_off = np.bincount(
+        rows_of_entry[off_mask], minlength=n
+    ).astype(np.int64)
+    off_start = np.cumsum(n_off) - n_off  # row -> first slot in off_entries
+
+    # entries taken by virtual row (v, g): off slots [gW, min((g+1)W, n_off))
+    cnt = np.clip(n_off[vr_v] - vr_g * W, 0, W)
+    total = int(cnt.sum())
+    e_start = np.cumsum(cnt) - cnt
+    lane = np.arange(total, dtype=np.int64) - np.repeat(e_start, cnt)
+    src = off_entries[
+        off_start[np.repeat(vr_v, cnt)] + np.repeat(vr_g, cnt) * W + lane
+    ]
+    dest = np.repeat(slot, cnt) * W + lane
+
+    # padding gathers read x[n] (scratch) -> harmless 0 contribution
+    col_idx = np.full(T * k * W, n, dtype=np.int32)
+    col_idx[dest] = L.indices[src]
+    vals = np.zeros(T * k * W, dtype=dtype)
+    vals[dest] = L.data[src]
+    # int32 matches col_idx and halves the host-side footprint; entry ids
+    # are bounded by nnz << 2^31
+    val_src = np.full(T * k * W, -1, dtype=np.int32)
+    val_src[dest] = src
+
+    return ExecPlan(
+        n=n,
+        k=k,
+        W=W,
+        row_ids=row_ids.reshape(T, k),
+        col_idx=col_idx.reshape(T, k, W),
+        vals=vals.reshape(T, k, W),
+        diag=diag.reshape(T, k),
+        accum=accum.reshape(T, k),
+        step_bounds=step_bounds.astype(np.int32),
+        val_src=val_src.reshape(T, k, W),
+        diag_src=diag_src.reshape(T, k),
+    )
+
+
+def _reference_compile_plan(
+    L: CSRMatrix,
+    sched: Schedule,
+    *,
+    width: int | None = None,
+    dtype=np.float32,
+) -> ExecPlan:
+    """The original per-row plan compiler (superstep x core x virtual row
+    Python loops). Kept solely as the equivalence oracle for the
+    vectorized ``compile_plan`` — do not call it on large matrices."""
+    n, k = L.n_rows, sched.k
+    row_nnz_off = L.row_nnz() - 1  # off-diagonal count (diag always present)
+    assert (row_nnz_off >= 0).all(), "matrix must have a full diagonal"
+    W = _resolve_width(row_nnz_off, n, width)
 
     chains = sched.chains()
     diag_vals = L.diagonal()
@@ -149,11 +280,8 @@ def compile_plan(
     vals = np.zeros((T, k, W), dtype=dtype)
     diag = np.ones((T, k), dtype=dtype)
     accum = np.zeros((T, k), dtype=bool)
-    # int32 matches col_idx and halves the host-side footprint; entry ids
-    # are bounded by nnz << 2^31
     val_src = np.full((T, k, W), -1, dtype=np.int32)
     diag_src = np.full((T, k), -1, dtype=np.int32)
-    # padding gathers read x[n] (scratch) -> harmless 0 contribution
     col_idx[:] = n
 
     for s in range(sched.n_supersteps):
@@ -188,3 +316,25 @@ def compile_plan(
         val_src=val_src,
         diag_src=diag_src,
     )
+
+
+def plans_bitwise_equal(a: ExecPlan, b: ExecPlan) -> bool:
+    """True iff two plans are bitwise identical — every tensor equal in
+    value AND dtype, plus the scalar geometry. The acceptance check for
+    the vectorized inspector; shared by tests and the inspector bench."""
+    if (a.n, a.k, a.W) != (b.n, b.k, b.W):
+        return False
+    for name in (
+        "row_ids", "col_idx", "vals", "diag", "accum", "step_bounds",
+        "val_src", "diag_src",
+    ):
+        ta, tb = getattr(a, name), getattr(b, name)
+        if ta is None or tb is None:
+            if ta is not tb:
+                return False
+            continue
+        if ta.dtype != tb.dtype or ta.shape != tb.shape:
+            return False
+        if not np.array_equal(ta, tb):
+            return False
+    return True

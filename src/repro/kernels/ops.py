@@ -4,6 +4,10 @@
 ``solver.executor.solve_with_plan`` backed by the Pallas kernel; on this
 CPU-only container it runs in interpret mode (the kernel body executes in
 Python), on TPU it lowers through Mosaic.
+
+This module is the device half of the ``pallas`` entry in
+``repro.backends`` — bind through the registry
+(``get_backend("pallas").bind(plan)``) unless you need the raw pieces.
 """
 from __future__ import annotations
 
@@ -40,6 +44,24 @@ def kernel_plan_arrays(plan: ExecPlan, *, steps_per_tile: int = 8, dtype=jnp.flo
     )
 
 
+def solve_with_kernel_arrays(
+    arrays, b, *, n: int, steps_per_tile: int, interpret: bool, dtype
+):
+    """The kernel-calling convention in one place: cast ``b``, append the
+    scratch row, run ``sptrsv_pallas`` over pre-built (tile-padded) plan
+    ``arrays``, drop the scratch row. Shared by ``bind_kernel_solver``
+    and the ``pallas`` entry of ``repro.backends``."""
+    b = jnp.asarray(b, dtype=dtype)
+    pad = jnp.zeros((1, *b.shape[1:]), dtype=dtype)
+    x = sptrsv_pallas(
+        *arrays,
+        jnp.concatenate([b, pad]),
+        steps_per_tile=steps_per_tile,
+        interpret=interpret,
+    )
+    return x[:n]
+
+
 def bind_kernel_solver(
     plan: ExecPlan,
     *,
@@ -55,15 +77,10 @@ def bind_kernel_solver(
     n = plan.n
 
     def solve(b):
-        b = jnp.asarray(b, dtype=dtype)
-        pad = jnp.zeros((1, *b.shape[1:]), dtype=dtype)
-        x = sptrsv_pallas(
-            *arrays,
-            jnp.concatenate([b, pad]),
-            steps_per_tile=steps_per_tile,
-            interpret=interpret,
+        return solve_with_kernel_arrays(
+            arrays, b, n=n, steps_per_tile=steps_per_tile,
+            interpret=interpret, dtype=dtype,
         )
-        return x[:n]
 
     return solve
 

@@ -3,11 +3,17 @@
 ``TriangularSolver.plan(L)`` runs the full inspector pipeline
 
     DAG build -> schedule (registry strategy) -> §5 reordering ->
-    ``compile_plan`` -> backend binding (scan | pallas | distributed)
+    ``compile_plan`` -> backend binding (``repro.backends`` registry)
 
 and returns a bound solver whose ``solve(b)`` applies and undoes every
 permutation internally — callers never see reordered indices. ``b`` may be
 ``f[n]`` or batched ``f[n, m]`` (multi-RHS; one plan traversal).
+
+Backends come from ``repro.backends.registry`` (scan | pallas |
+distributed built in; register your own), and every binding is a
+``BoundSolve``: numeric refreshes go through its device-side
+``update_values`` gather — no plan tensor ever round-trips host memory
+after the first bind.
 
 ``lower=False`` solves an *upper*-triangular system via the
 reverse-permutation trick (an upper-triangular matrix reversed
@@ -39,8 +45,6 @@ from repro.sparse.csr import (
     transpose_csr,
 )
 from repro.sparse.dag import dag_from_lower_csr
-
-BACKENDS = ("scan", "pallas", "distributed")
 
 
 def mesh_fingerprint(mesh) -> tuple | None:
@@ -148,76 +152,25 @@ class TriangularSolver:
 
     # ---------------------------------------------------------- binding
     def _bind(self) -> None:
-        """(Re)bind device-resident plan tensors — called at construction
-        and after every ``numeric_update``."""
-        if self.backend == "scan":
-            from repro.solver.executor import plan_arrays, solve_with_plan
+        """Bind device-resident plan tensors through the
+        ``repro.backends`` registry — called once at construction.
+        Numeric refreshes never come back here: they go through the
+        bound solve's device-side ``update_values`` gather."""
+        from repro.backends import get_backend
 
-            pa = plan_arrays(self.exec_plan, dtype=self.dtype)
-            self._exec = lambda bp: solve_with_plan(pa, bp)
-        elif self.backend == "pallas":
-            from repro.kernels.ops import bind_kernel_solver
+        self._bound = get_backend(self.backend).bind(
+            self.exec_plan,
+            dtype=self.dtype,
+            steps_per_tile=self._steps_per_tile,
+            interpret=self._interpret,
+            mesh=self._mesh,
+        )
 
-            self._exec = bind_kernel_solver(
-                self.exec_plan,
-                steps_per_tile=self._steps_per_tile,
-                dtype=self.dtype,
-                interpret=self._interpret,
-            )
-        elif self.backend == "distributed":
-            import jax
-
-            from repro.solver.distributed import (
-                build_distributed_solver,
-                dist_plan_spec,
-            )
-
-            if self._mesh is None:
-                raise ValueError("backend='distributed' requires a mesh")
-            mesh = self._mesh
-            plan = self.exec_plan
-            data_ax = mesh.shape["data"]
-            # plan tensors transfer once; the jitted sharded solve is cached
-            # per (padded) batch size — batch is static in the lowered graph
-            args = (
-                jnp.asarray(plan.row_ids, jnp.int32),
-                jnp.asarray(plan.col_idx, jnp.int32),
-                jnp.asarray(plan.vals, self.dtype),
-                jnp.asarray(plan.diag, self.dtype),
-                jnp.asarray(plan.accum.astype(np.dtype(self.dtype))),
-            )
-            jitted = {}
-
-            def _exec(bp):
-                b2 = np.asarray(bp)
-                single = b2.ndim == 1
-                b2 = b2[None, :] if single else np.ascontiguousarray(b2.T)
-                B = b2.shape[0]
-                # the batch shards over 'data': pad it to a multiple
-                Bp = -(-B // data_ax) * data_ax
-                b2 = np.concatenate(
-                    [b2, np.zeros((Bp - B, b2.shape[1]), b2.dtype)]
-                )
-                b_pad = np.concatenate(
-                    [b2, np.zeros((Bp, 1), b2.dtype)], axis=1
-                )
-                fn = jitted.get(Bp)
-                if fn is None:
-                    spec = dist_plan_spec(
-                        plan, batch=Bp, dtype=np.dtype(self.dtype)
-                    )
-                    fn = jax.jit(build_distributed_solver(spec, mesh))
-                    jitted[Bp] = fn
-                with mesh:
-                    x = fn(*args, jnp.asarray(b_pad, self.dtype))
-                x = np.asarray(x)[:, : plan.n]
-                return jnp.asarray(x[0] if single else x[:B].T)
-
-            self._exec = _exec
-        else:
-            raise ValueError(
-                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
-            )
+    @property
+    def bound(self):
+        """The backend ``BoundSolve`` this solver executes through
+        (telemetry via ``bound.describe()``)."""
+        return self._bound
 
     # ---------------------------------------------------------- solving
     def solve(self, b):
@@ -230,7 +183,7 @@ class TriangularSolver:
             raise ValueError(
                 f"b must be [n] or [n, m] with n={self.n}; got {b.shape}"
             )
-        x = self._exec(b[self._perm])
+        x = self._bound.solve(b[self._perm])
         return x[self._inv]
 
     __call__ = solve
@@ -249,9 +202,15 @@ class TriangularSolver:
             data = a.data
         else:
             data = np.asarray(a)
+        # host mirror: bind() reads the host plan tensors, so they must
+        # stay a faithful source for any future (re)bind of this plan —
+        # letting them go stale would make such a bind silently solve
+        # with old values. A deliberate O(plan) host cost per refresh.
         self.exec_plan.numeric_update(data)
         self._source_data = np.array(data)
-        self._bind()
+        # device refresh: an O(nnz) gather through val_src/diag_src — the
+        # plan's index tensors stay on device, nothing retransfers
+        self._bound = self._bound.update_values(data)
 
     def _with_values(self, data: np.ndarray) -> "TriangularSolver":
         """A sibling solver with new numeric values: shares the (read-only)
@@ -307,6 +266,7 @@ class TriangularSolver:
             "n_supersteps": self.n_supersteps,
             "inspector_seconds": self.inspector_seconds,
             "plan": self.exec_plan.stats(),
+            "binding": self._bound.describe(),
         }
         if self._selection is not None:
             out["selection"] = self._selection.as_dict()
@@ -363,6 +323,11 @@ class TriangularSolver:
         # string enters the plan-cache key ("GrowLocal" vs "growlocal"
         # must not schedule twice); also makes strategy="Auto" work
         strategy = strategy.lower()
+        # fail fast on an unknown backend — before any scheduling work and
+        # with the registry (not a hard-coded tuple) naming the options
+        from repro.backends import get_backend
+
+        get_backend(backend)
         if tune and (strategy != "auto" or sched is not None):
             raise ValueError(
                 "tune=True runs measured trials to refine an auto "

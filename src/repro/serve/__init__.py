@@ -35,7 +35,12 @@ from repro.serve.loadgen import (
     run_open_loop,
 )
 from repro.serve.metrics import LatencyReservoir, ServeMetrics, pretty
-from repro.serve.service import SolveService, SolveTicket, direct_reference
+from repro.serve.service import (
+    QueueFullError,
+    SolveService,
+    SolveTicket,
+    direct_reference,
+)
 from repro.serve.updates import VersionedPlans
 
 __all__ = [
@@ -52,6 +57,7 @@ __all__ = [
     "LatencyReservoir",
     "ServeMetrics",
     "pretty",
+    "QueueFullError",
     "SolveService",
     "SolveTicket",
     "direct_reference",

@@ -31,7 +31,12 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serve.service import SolveService, SolveTicket, direct_reference
+from repro.serve.service import (
+    QueueFullError,
+    SolveService,
+    SolveTicket,
+    direct_reference,
+)
 from repro.sparse.generators import erdos_renyi_lower
 
 MIXES = ("hot", "uniform", "adversarial")
@@ -154,9 +159,12 @@ def _report(
     elapsed: float,
     errors: int,
     mismatches: Optional[int],
+    rejected: int = 0,
 ) -> dict:
     snap = service.stats()
-    completed = n_requests - errors  # failures are not throughput
+    # rejected requests are back-pressure working as designed, not
+    # failures — reported separately and excluded from throughput
+    completed = n_requests - errors - rejected
     return {
         "mode": mode,
         "requests": n_requests,
@@ -164,6 +172,7 @@ def _report(
         "elapsed_seconds": round(elapsed, 4),
         "solves_per_sec": round(completed / elapsed, 1) if elapsed else 0.0,
         "errors": errors,
+        "rejected": rejected,
         "bitwise_mismatches": mismatches,
         "latency_us": snap["latency_us"],
         "queue_wait_us": snap["queue_wait_us"],
@@ -184,6 +193,7 @@ def run_closed_loop(
     """``n_clients`` threads, each submitting ``requests_per_client``
     requests back-to-back (waiting for each result)."""
     errors = [0] * n_clients
+    rejected = [0] * n_clients
     kept: List[List] = [[] for _ in range(n_clients)]
 
     def client(ci: int) -> None:
@@ -194,6 +204,8 @@ def run_closed_loop(
                 x = ticket.result(timeout)
                 if validate:
                     kept[ci].append((ticket, b, x))
+            except QueueFullError:
+                rejected[ci] += 1
             except Exception:
                 errors[ci] += 1
 
@@ -219,6 +231,7 @@ def run_closed_loop(
         elapsed=elapsed,
         errors=sum(errors),
         mismatches=mism,
+        rejected=sum(rejected),
     )
 
 
@@ -245,12 +258,15 @@ def run_open_loop(
         inflight.append((service.submit(fp, b), b))
         next_t += interval
     errors = 0
+    rejected = 0
     served = []
     for ticket, b in inflight:
         try:
             x = ticket.result(timeout)
             if validate:
                 served.append((ticket, b, x))
+        except QueueFullError:
+            rejected += 1
         except Exception:
             errors += 1
     elapsed = time.perf_counter() - t0
@@ -262,4 +278,5 @@ def run_open_loop(
         elapsed=elapsed,
         errors=errors,
         mismatches=mism,
+        rejected=rejected,
     )

@@ -60,14 +60,15 @@ def _percentiles_us(arr: np.ndarray) -> Dict[str, float]:
 
 class _PatternStats:
     __slots__ = (
-        "submitted", "completed", "failed", "batches", "batch_hist",
-        "queue_wait", "e2e", "updates",
+        "submitted", "completed", "failed", "rejected", "batches",
+        "batch_hist", "queue_wait", "e2e", "updates",
     )
 
     def __init__(self):
         self.submitted = 0
         self.completed = 0
         self.failed = 0
+        self.rejected = 0  # bounced at admission (max_queue back-pressure)
         self.batches = 0
         self.updates = 0  # numeric_update version swaps
         self.batch_hist: Counter = Counter()  # actual batch size -> count
@@ -109,6 +110,10 @@ class ServeMetrics:
         with self._lock:
             self._pat(fp).updates += 1
 
+    def record_rejected(self, fp: str) -> None:
+        with self._lock:
+            self._pat(fp).rejected += 1
+
     def record_batch(
         self,
         fp: str,
@@ -140,7 +145,7 @@ class ServeMetrics:
         top level by the service."""
         with self._lock:
             per_pattern = {}
-            tot_sub = tot_done = tot_fail = tot_batches = 0
+            tot_sub = tot_done = tot_fail = tot_rej = tot_batches = 0
             hist: Counter = Counter()
             # global percentiles pool every pattern's window uncapped —
             # funneling them through one capped reservoir would silently
@@ -151,6 +156,7 @@ class ServeMetrics:
                 tot_sub += p.submitted
                 tot_done += p.completed
                 tot_fail += p.failed
+                tot_rej += p.rejected
                 tot_batches += p.batches
                 hist.update(p.batch_hist)
                 all_e2e.extend(p.e2e._samples)
@@ -159,6 +165,7 @@ class ServeMetrics:
                     "submitted": p.submitted,
                     "completed": p.completed,
                     "failed": p.failed,
+                    "rejected": p.rejected,
                     "batches": p.batches,
                     "numeric_updates": p.updates,
                     "batch_size_hist": dict(sorted(p.batch_hist.items())),
@@ -174,6 +181,7 @@ class ServeMetrics:
                 "submitted": tot_sub,
                 "completed": tot_done,
                 "failed": tot_fail,
+                "rejected": tot_rej,
                 "queue_depth": queue_depth,
                 "batches": tot_batches,
                 "mean_batch_size": round(tot_done / tot_batches, 2)
@@ -199,7 +207,8 @@ def pretty(snap: dict) -> str:
     lines = [
         "== serve metrics ==",
         f"requests: {snap['completed']}/{snap['submitted']} completed"
-        f" ({snap['failed']} failed, queue depth {snap['queue_depth']})",
+        f" ({snap['failed']} failed, {snap.get('rejected', 0)} rejected, "
+        f"queue depth {snap['queue_depth']})",
         f"throughput: {snap['solves_per_sec']} solves/s over "
         f"{snap['elapsed_seconds']}s in {snap['batches']} batches "
         f"(mean batch {snap['mean_batch_size']})",

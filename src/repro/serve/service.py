@@ -24,6 +24,13 @@ Correctness contracts (enforced by tests/test_serve.py):
 The service owns (or shares) a ``PlanCache`` and pins the plan entries it
 serves, so cache-eviction pressure from pattern churn cannot evict a plan
 with live traffic.
+
+Back-pressure: ``max_queue`` bounds the admission queue. When the
+backlog is at the bound, ``submit`` returns a ticket in the ``rejected``
+state immediately (``result()`` raises ``QueueFullError``) instead of
+letting the queue grow without bound; rejections are counted in the
+metrics. Version swaps and numeric updates are never rejected — only
+solve admissions are.
 """
 from __future__ import annotations
 
@@ -40,18 +47,27 @@ from repro.serve.updates import VersionedPlans
 from repro.sparse.csr import CSRMatrix, pattern_fingerprint
 
 
+class QueueFullError(RuntimeError):
+    """Raised by ``SolveTicket.result()`` when the request was rejected
+    at admission because the service's ``max_queue`` bound was hit."""
+
+
 class SolveTicket:
     """Future for one submitted request. ``result()`` blocks until the
-    microbatch containing this request has been served."""
+    microbatch containing this request has been served — or raises
+    immediately if the request was ``rejected`` at admission
+    (back-pressure)."""
 
     __slots__ = (
         "fingerprint", "version", "batch_width", "batch_position",
-        "served_by", "_event", "_result", "_error", "t_submit", "t_done",
+        "served_by", "rejected", "_event", "_result", "_error",
+        "t_submit", "t_done",
     )
 
     def __init__(self, fingerprint: str, version: int):
         self.fingerprint = fingerprint
         self.version = version  # plan version pinned at admission
+        self.rejected = False  # True: bounced by the admission bound
         self.batch_width: Optional[int] = None  # set at dispatch
         self.batch_position: Optional[int] = None  # column in the batch
         # the TriangularSolver that served this request — kept on the
@@ -79,6 +95,16 @@ class SolveTicket:
         self._error = error
         self.t_done = time.perf_counter()
         self._event.set()
+
+    def _reject(self, depth: int, bound: int) -> None:
+        self.rejected = True
+        self._fulfill(
+            None,
+            QueueFullError(
+                f"admission queue full ({depth} >= max_queue={bound}); "
+                "request rejected — retry with backoff"
+            ),
+        )
 
 
 class _Request:
@@ -113,10 +139,12 @@ class SolveService:
 
     Parameters mirror the two serving knobs plus the plan binding:
     ``max_batch`` / ``max_wait_us`` bound each microbatch's size and
-    latency cost; ``n_workers`` executes batches concurrently (distinct
-    routes only — one batch owns its whole route group); everything in
-    ``plan_defaults`` (strategy, backend, dtype, k, ...) flows to
-    ``TriangularSolver.plan`` at registration.
+    latency cost; ``max_queue`` bounds the admission backlog (None =
+    unbounded; at the bound, submits come back ``rejected`` instead of
+    growing the queue); ``n_workers`` executes batches concurrently
+    (distinct routes only — one batch owns its whole route group);
+    everything in ``plan_defaults`` (strategy, backend, dtype, k, ...)
+    flows to ``TriangularSolver.plan`` at registration.
     """
 
     def __init__(
@@ -124,12 +152,16 @@ class SolveService:
         *,
         max_batch: int = 32,
         max_wait_us: int = 2000,
+        max_queue: Optional[int] = None,
         n_workers: int = 1,
         cache: Optional[PlanCache] = None,
         strategy: str = "auto",
         **plan_defaults,
     ):
         self.max_batch = max_batch
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+        self.max_queue = max_queue
         self.cache = cache if cache is not None else PlanCache()
         self._plan_defaults = dict(strategy=strategy, **plan_defaults)
         self._patterns: Dict[str, VersionedPlans] = {}
@@ -246,6 +278,18 @@ class SolveService:
                 f"submit takes one right-hand side f[n={vp.n}]; got "
                 f"{b.shape} (batching is the service's job)"
             )
+        # admission bound: bounce instead of growing the backlog. The
+        # check-then-put is advisory (racing submits may briefly overshoot
+        # by n_producers), which is the standard cheap admission-control
+        # trade-off — the queue stays O(max_queue), never unbounded.
+        if (
+            self.max_queue is not None
+            and self._batcher.depth() >= self.max_queue
+        ):
+            ticket = SolveTicket(fp, -1)
+            self.metrics.record_rejected(fp)
+            ticket._reject(self._batcher.depth(), self.max_queue)
+            return ticket
         version, _ = vp.admit()
         ticket = SolveTicket(fp, version)
         self.metrics.record_submit(fp)
@@ -354,6 +398,11 @@ class SolveService:
         live plan versions per pattern."""
         cs = self.cache.stats
         looked_up = cs.hits + cs.misses
+        # snapshot under the registry lock: submit(CSRMatrix) auto-registers
+        # concurrently, and iterating the live dict while it grows would
+        # crash the telemetry thread
+        with self._plock:
+            patterns = list(self._patterns.items())
         return self.metrics.snapshot(
             queue_depth=self._batcher.depth(),
             extra={
@@ -367,8 +416,14 @@ class SolveService:
                     fp: {
                         "versions_alive": vp.live_versions(),
                         "current_version": vp.current,
+                        # the backend BoundSolve's own telemetry (shapes,
+                        # device bytes, compiled variants) — registry
+                        # backends all speak describe(); current_solver()
+                        # reads atomically so a racing update cannot
+                        # retire the version mid-lookup
+                        "binding": vp.current_solver().bound.describe(),
                     }
-                    for fp, vp in self._patterns.items()
+                    for fp, vp in patterns
                 },
             },
         )

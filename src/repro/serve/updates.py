@@ -53,6 +53,14 @@ class VersionedPlans:
         with self._lock:
             return self._versions[version]
 
+    def current_solver(self):
+        """The current version's solver, read atomically — reading
+        ``vp.current`` and then calling ``solver_for`` without the lock
+        can race a concurrent ``update`` retiring the version between
+        the two reads (telemetry's KeyError hazard)."""
+        with self._lock:
+            return self._versions[self.current]
+
     def complete(self, version: int, count: int = 1) -> None:
         """Unpin ``count`` requests from ``version``; retire superseded
         versions that have fully drained."""

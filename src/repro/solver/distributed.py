@@ -13,6 +13,11 @@ collective term counts these). Multi-RHS (SpTRSM) batches shard over the
 
 ``distributed_input_specs`` / ``lower_distributed_solve`` are consumed by
 ``launch/dryrun.py`` for the paper-workload dry-run cells.
+
+This module is the device half of the ``distributed`` entry in
+``repro.backends`` — bind through the registry
+(``get_backend("distributed").bind(plan, mesh=mesh)``) unless you need
+the raw pieces.
 """
 from __future__ import annotations
 

@@ -1,5 +1,9 @@
 """Single-chip JAX executor: a `lax.scan` over the ExecPlan.
 
+This module is the device half of the ``scan`` entry in
+``repro.backends`` — bind through the registry
+(``get_backend("scan").bind(plan)``) unless you need the raw pieces.
+
 Each scan step processes one lock-step row per core (k rows in parallel on
 the VPU): gather x at the row's column indices, fused multiply-accumulate,
 divide by the diagonal, scatter into x. Same-core sequential chains flow

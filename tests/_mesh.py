@@ -1,0 +1,33 @@
+"""Shared multi-device subprocess harness.
+
+jax locks the host device count at first init, so anything needing a
+multi-device CPU mesh (shard_map executors, the distributed backend)
+runs in a subprocess with XLA_FLAGS forcing the device count. One
+helper, used by tests/test_distributed.py, tests/test_backends.py and
+tests/test_conformance.py, so the isolation recipe lives in one place.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_in_mesh_subprocess(
+    code: str, *, devices: int = 8, timeout: int = 600
+) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` forced CPU
+    devices and PYTHONPATH=src; asserts exit 0 and returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

@@ -95,6 +95,51 @@ def test_classify_matches_corpus_metadata():
         assert classify(f) == e.regime, (e.name, classify(f), e.regime)
 
 
+@pytest.mark.slow
+def test_classify_stable_at_scale():
+    """ROADMAP N>=1e5 recalibration: every scale-tier matrix (same
+    families as the container corpus, scaled to 100k rows) classifies to
+    its declared regime — in particular the deep narrow-band family must
+    stay 'banded' even though its average wavefront crosses the absolute
+    8k width threshold at this size (the rule-order fix). Feature
+    extraction at 100k rows is seconds thanks to the vectorized
+    inspector stack, which is what unblocked this test."""
+    from repro.autotune import scale_corpus_entries
+
+    assert len(scale_corpus_entries()) >= 5
+    for e in scale_corpus_entries():
+        m = e.matrix()
+        assert m.n_rows >= 100_000
+        f = matrix_features(m)
+        assert classify(f) == e.regime, (e.name, classify(f), e.regime)
+        # the scale tier mirrors container-corpus families: the label must
+        # ALSO match its small sibling's where one exists (scale
+        # stability) — except er_dense, whose mixed -> wide transition is
+        # real physics, not threshold drift: at a fixed row degree the
+        # average level width grows with n, so at 100k its levels are
+        # thousands wide and barriers amortize
+        small = e.name.replace("_100k", "")
+        small_regimes = {s.name: s.regime for s in corpus_entries()}
+        if small in small_regimes and e.name != "er_dense_100k":
+            assert e.regime == small_regimes[small], (e.name, small)
+
+
+@pytest.mark.slow
+def test_scale_corpus_not_in_default_corpus():
+    """The scale tier must never leak into the default corpus — the
+    conformance grid and serve loadgen iterate corpus_names() and would
+    pay the 100k inspector in every cell."""
+    from repro.autotune import scale_corpus_entry, scale_corpus_names
+
+    assert set(scale_corpus_names()).isdisjoint(corpus_entries_names())
+    with pytest.raises(KeyError, match="unknown scale-corpus"):
+        scale_corpus_entry("er_sparse")
+
+
+def corpus_entries_names():
+    return {e.name for e in corpus_entries()}
+
+
 def test_shortlist_is_small_and_deterministic():
     for e in corpus_entries():
         f = matrix_features(e.matrix())

@@ -1,0 +1,210 @@
+"""``repro.backends`` — the registry contract and the ``update_values``
+value contract (device-side refresh bitwise-equal to a fresh bind).
+
+The distributed backend needs >1 device, so its cells run in a
+subprocess with XLA_FLAGS (tests/_mesh.py — same isolation as
+tests/test_distributed.py).
+"""
+import numpy as np
+import pytest
+from _mesh import run_in_mesh_subprocess
+
+from repro.backends import (
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
+from repro.core.plan import compile_plan
+from repro.pipeline import TriangularSolver, schedule
+from repro.sparse import dag_from_lower_csr, erdos_renyi_lower
+
+# in-process backends; distributed is covered by the subprocess test below
+LOCAL_BACKENDS = [b for b in available_backends() if b != "distributed"]
+
+
+def _bind_kwargs(backend: str) -> dict:
+    return {"interpret": True, "steps_per_tile": 4} if backend == "pallas" else {}
+
+
+@pytest.fixture(scope="module")
+def planned():
+    L = erdos_renyi_lower(150, 0.04, seed=31)
+    s = schedule(dag_from_lower_csr(L), 4, strategy="growlocal")
+    return L, s
+
+
+# -------------------------------------------------------------- registry
+def test_builtins_registered():
+    assert set(available_backends()) == {"scan", "pallas", "distributed"}
+    for name in available_backends():
+        assert get_backend(name).name == name
+
+
+def test_unknown_backend_rejected(planned):
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("nope")
+    L, _ = planned
+    with pytest.raises(ValueError, match="unknown backend"):
+        TriangularSolver.plan(L, backend="nope")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_backend
+        class Shadow(Backend):
+            name = "scan"
+
+            def bind(self, exec_plan, **params):
+                raise NotImplementedError
+
+
+def test_custom_backend_reaches_the_pipeline(planned):
+    """A registry entry is all a new backend needs: TriangularSolver
+    binds it with no pipeline changes (the death of the elif chain)."""
+    calls = []
+
+    @register_backend
+    class Recording(Backend):
+        name = "test-recording"
+
+        def bind(self, exec_plan, **params):
+            inner = get_backend("scan").bind(exec_plan, **params)
+            calls.append(exec_plan.n)
+            return inner
+
+    try:
+        L, _ = planned
+        solver = TriangularSolver.plan(L, backend="test-recording", k=4)
+        assert calls == [L.n_rows]
+        b = np.random.default_rng(0).standard_normal(L.n_rows)
+        ref = TriangularSolver.plan(L, backend="scan", k=4).solve(b)
+        assert np.array_equal(np.asarray(solver.solve(b)), np.asarray(ref))
+    finally:
+        unregister_backend("test-recording")
+
+
+def test_describe_is_json_ready(planned):
+    import json
+
+    L, s = planned
+    plan = compile_plan(L, s)
+    for name in LOCAL_BACKENDS:
+        d = get_backend(name).bind(plan, **_bind_kwargs(name)).describe()
+        assert d["backend"] == name and d["n"] == L.n_rows
+        json.dumps(d)  # must serialize for serve/bench telemetry
+
+
+def test_distributed_requires_mesh(planned):
+    L, s = planned
+    assert get_backend("distributed").requires() == ("mesh",)
+    with pytest.raises(ValueError, match="requires a mesh"):
+        get_backend("distributed").bind(compile_plan(L, s))
+
+
+# ----------------------------------------- update_values value contract
+@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+def test_update_values_bitwise_equals_fresh_bind(planned, backend):
+    """ISSUE 4 acceptance: ``BoundSolve.update_values`` produces solves
+    bitwise-equal to a fresh bind, and never mutates the old bound."""
+    import dataclasses
+
+    L, s = planned
+    rng = np.random.default_rng(7)
+    L2 = dataclasses.replace(L, data=L.data * rng.uniform(0.5, 2.0, L.nnz))
+    plan1 = compile_plan(L, s)
+    plan2 = compile_plan(L2, s)
+    kw = _bind_kwargs(backend)
+    bound1 = get_backend(backend).bind(plan1, **kw)
+    fresh2 = get_backend(backend).bind(plan2, **kw)
+
+    for shape in ((L.n_rows,), (L.n_rows, 3)):
+        b = rng.standard_normal(shape).astype(np.float32)
+        x1_before = np.asarray(bound1.solve(b))
+        bound2 = bound1.update_values(L2.data)
+        assert np.array_equal(
+            np.asarray(bound2.solve(b)), np.asarray(fresh2.solve(b))
+        ), (backend, shape)
+        # immutability: the old bound still solves with the old values
+        assert np.array_equal(np.asarray(bound1.solve(b)), x1_before)
+
+
+@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+def test_update_values_rejects_mis_sized_data(planned, backend):
+    """The device gather clamps out-of-range indices, so a wrong-pattern
+    data vector must be rejected up front — not silently produce garbage
+    values (the same hazard solve() guards for b)."""
+    L, s = planned
+    bound = get_backend(backend).bind(compile_plan(L, s),
+                                      **_bind_kwargs(backend))
+    assert bound.n_entries == L.nnz
+    for bad in (L.data[:-1], np.concatenate([L.data, [1.0]]),
+                L.data.reshape(1, -1)):
+        with pytest.raises(ValueError, match="entry data"):
+            bound.update_values(bad)
+
+
+@pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+def test_solver_numeric_update_bitwise_equals_fresh_plan(backend):
+    """The same contract through TriangularSolver (covers the §5 reorder
+    entry-map rebase: val_src is in caller entry order there)."""
+    import dataclasses
+
+    L = erdos_renyi_lower(130, 0.05, seed=32)
+    rng = np.random.default_rng(8)
+    L2 = dataclasses.replace(L, data=L.data * rng.uniform(0.5, 2.0, L.nnz))
+    kw = _bind_kwargs(backend)
+    solver = TriangularSolver.plan(L, k=4, backend=backend, **kw)
+    fresh = TriangularSolver.plan(L2, k=4, backend=backend, **kw)
+    solver.numeric_update(L2)
+    b = rng.standard_normal((L.n_rows, 2)).astype(np.float32)
+    assert np.array_equal(
+        np.asarray(solver.solve(b)), np.asarray(fresh.solve(b))
+    )
+
+
+def test_update_values_distributed_subprocess():
+    """The distributed cell of the update_values contract (needs a
+    multi-device mesh -> subprocess with forced host device count)."""
+    out = run_in_mesh_subprocess("""
+        import dataclasses
+        import numpy as np, jax
+        from repro.backends import get_backend
+        from repro.core.plan import compile_plan
+        from repro.pipeline import schedule
+        from repro.sparse import dag_from_lower_csr, erdos_renyi_lower
+
+        L = erdos_renyi_lower(300, 0.02, seed=33)
+        s = schedule(dag_from_lower_csr(L), 4, strategy="growlocal")
+        rng = np.random.default_rng(9)
+        L2 = dataclasses.replace(L, data=L.data * rng.uniform(0.5, 2.0, L.nnz))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        be = get_backend("distributed")
+        bound1 = be.bind(compile_plan(L, s), mesh=mesh)
+        fresh2 = be.bind(compile_plan(L2, s), mesh=mesh)
+        b = rng.standard_normal((L.n_rows, 3)).astype(np.float32)
+        x1_before = np.asarray(bound1.solve(b))
+        bound2 = bound1.update_values(L2.data)
+        assert np.array_equal(np.asarray(bound2.solve(b)),
+                              np.asarray(fresh2.solve(b)))
+        assert np.array_equal(np.asarray(bound1.solve(b)), x1_before)
+        # value refreshes reuse the jitted shape cache (no recompilation)
+        assert bound2.describe()["compiled_batch_sizes"] == [4]
+        # serial's k=1 pads up to the 4-device model axis...
+        s1 = schedule(dag_from_lower_csr(L), 1, strategy="serial")
+        b1 = be.bind(compile_plan(L, s1), mesh=mesh)
+        x1 = np.asarray(b1.solve(b))
+        assert x1.shape == b.shape
+        # ...but more schedule cores than devices is a clear error, not a
+        # trace-time shape failure
+        s8 = schedule(dag_from_lower_csr(L), 8, strategy="growlocal")
+        try:
+            be.bind(compile_plan(L, s8), mesh=mesh)
+            raise SystemExit("k=8 on a 4-device model axis must be rejected")
+        except ValueError as e:
+            assert "model" in str(e)
+        print("dist-update-ok")
+    """)
+    assert "dist-update-ok" in out

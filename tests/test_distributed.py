@@ -1,27 +1,11 @@
 """Multi-device tests. The shard_map executor needs >1 device, and jax locks
 the host device count at first init — so these run in subprocesses with
-XLA_FLAGS set (the same isolation dryrun.py uses)."""
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
-import pytest
-
-SRC = str(Path(__file__).resolve().parents[1] / "src")
+XLA_FLAGS set (tests/_mesh.py; the same isolation dryrun.py uses)."""
+from _mesh import run_in_mesh_subprocess
 
 
 def _run(code: str, devices: int = 8, timeout: int = 600):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=timeout, env=env,
-    )
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+    return run_in_mesh_subprocess(code, devices=devices, timeout=timeout)
 
 
 def test_shard_map_executor_matches_scipy():

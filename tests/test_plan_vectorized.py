@@ -1,0 +1,136 @@
+"""The vectorized inspector's contract: ``compile_plan`` (O(nnz) array
+passes) is bitwise-identical to ``_reference_compile_plan`` (the original
+per-row compiler, kept as the oracle) — every tensor, every dtype — across
+matrix shapes, strategies, orientations and widths. Plus the
+``ExecPlan.stats()`` nnz-accounting regression (explicit stored zeros)."""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core.plan import (
+    _reference_compile_plan,
+    compile_plan,
+    plans_bitwise_equal,
+)
+from repro.pipeline import schedule
+from repro.sparse import (
+    csr_from_coo,
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    transpose_csr,
+)
+from repro.sparse.csr import permute_symmetric
+
+
+def _mirror(a):
+    """The lower-triangular mirror plan() feeds the compiler for an
+    upper-triangular matrix (reverse-permutation trick)."""
+    outer = np.arange(a.n_rows, dtype=np.int64)[::-1].copy()
+    return permute_symmetric(a, outer)
+
+
+def _assert_identical(L, sched, **kw):
+    vec = compile_plan(L, sched, **kw)
+    ref = _reference_compile_plan(L, sched, **kw)
+    for name in (
+        "row_ids", "col_idx", "vals", "diag", "accum", "step_bounds",
+        "val_src", "diag_src",
+    ):
+        tv, tr = getattr(vec, name), getattr(ref, name)
+        assert tv.dtype == tr.dtype, (name, tv.dtype, tr.dtype)
+        np.testing.assert_array_equal(tv, tr, err_msg=name)
+    assert (vec.n, vec.k, vec.W) == (ref.n, ref.k, ref.W)
+    assert plans_bitwise_equal(vec, ref)
+
+
+@pytest.mark.parametrize("strategy", ["growlocal", "hdagg", "serial"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_bitwise_equivalence_basic(any_matrix, strategy, k):
+    dag = dag_from_lower_csr(any_matrix)
+    s = schedule(dag, k, strategy=strategy)
+    _assert_identical(any_matrix, s)
+
+
+def test_bitwise_equivalence_upper_mirror(ichol_matrix):
+    m = _mirror(transpose_csr(ichol_matrix))
+    s = schedule(dag_from_lower_csr(m), 4, strategy="growlocal")
+    _assert_identical(m, s)
+
+
+@pytest.mark.parametrize("width", [1, 3, 64])
+def test_bitwise_equivalence_forced_widths(er_matrix, width):
+    """W=1 maximizes virtual-row splitting; W=64 pads everything."""
+    s = schedule(dag_from_lower_csr(er_matrix), 4, strategy="growlocal")
+    _assert_identical(er_matrix, s, width=width)
+
+
+def test_bitwise_equivalence_float64(nb_matrix):
+    s = schedule(dag_from_lower_csr(nb_matrix), 4, strategy="growlocal")
+    _assert_identical(nb_matrix, s, dtype=np.float64)
+
+
+def test_empty_matrix():
+    m = csr_from_coo(0, 0, np.empty(0, np.int64), np.empty(0, np.int64),
+                     np.empty(0))
+    s = schedule(dag_from_lower_csr(m), 2, strategy="growlocal")
+    _assert_identical(m, s)
+
+
+def test_diagonal_only_matrix():
+    idx = np.arange(5, dtype=np.int64)
+    m = csr_from_coo(5, 5, idx, idx, np.arange(1.0, 6.0))
+    s = schedule(dag_from_lower_csr(m), 3, strategy="hdagg")
+    _assert_identical(m, s)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    density=st.floats(1e-3, 0.3),
+    k=st.integers(1, 9),
+    width=st.one_of(st.none(), st.integers(1, 16)),
+    strategy=st.sampled_from(["growlocal", "hdagg", "serial", "wavefront"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitwise_equivalence_property(n, density, k, width, strategy, seed):
+    """Property: for ANY (matrix, schedule, width) the two compilers
+    produce identical plans — the wide-row virtual split, padding, and
+    source maps all included."""
+    m = erdos_renyi_lower(n, density, seed=seed)
+    s = schedule(dag_from_lower_csr(m), k, strategy=strategy)
+    _assert_identical(m, s, width=width)
+
+
+@pytest.mark.slow
+def test_bitwise_equivalence_full_corpus_grid():
+    """Every scenario-corpus matrix x every registered strategy x both
+    orientations (ISSUE 4 acceptance: corpus-wide bitwise equivalence)."""
+    from repro.autotune import corpus_entry, corpus_names
+    from repro.pipeline import available_strategies
+
+    for name in corpus_names():
+        L = corpus_entry(name).matrix()
+        for m in (L, _mirror(transpose_csr(L))):
+            dag = dag_from_lower_csr(m)
+            for strategy in available_strategies():
+                _assert_identical(m, schedule(dag, 8, strategy=strategy))
+
+
+# ------------------------------------------------- stats() nnz accounting
+def test_stats_counts_explicit_zero_entries():
+    """Regression: a stored-but-zero off-diagonal entry is still a real
+    plan slot — stats() must count from ``val_src >= 0``, not from
+    ``vals != 0``."""
+    rows = np.array([0, 1, 1, 2, 2], dtype=np.int64)
+    cols = np.array([0, 0, 1, 0, 2], dtype=np.int64)
+    vals = np.array([2.0, 0.0, 3.0, 0.0, 4.0])  # two explicit zeros
+    m = csr_from_coo(3, 3, rows, cols, vals)
+    s = schedule(dag_from_lower_csr(m), 2, strategy="serial")
+    plan = compile_plan(m, s)
+    nnz_slots = plan.col_idx.shape[0] * plan.k * plan.W
+    got = plan.stats()["nnz_slot_utilization"]
+    assert got == 2 / nnz_slots  # the 2 stored off-diagonal entries
+    assert got > (plan.vals != 0).sum() / nnz_slots  # old accounting undercounts
+    # plans without source maps keep the value-based fallback
+    plan.val_src = None
+    assert plan.stats()["nnz_slot_utilization"] == 0.0

@@ -25,6 +25,7 @@ import pytest
 from repro.pipeline import PlanCache, TriangularSolver
 from repro.serve import (
     MicroBatcher,
+    QueueFullError,
     SolveService,
     VersionedPlans,
     direct_reference,
@@ -421,6 +422,79 @@ def test_loadgen_open_loop(mats):
         )
     assert report["requests"] == 12 and report["errors"] == 0
     assert report["bitwise_mismatches"] == 0
+
+
+# ------------------------------------------------ back-pressure (max_queue)
+def test_backpressure_rejects_overflow_keeps_queue_bounded(mats):
+    """With a bounded admission queue and a stalled worker (long batch
+    deadline, big max_batch), overflow submissions come back rejected
+    instead of growing the backlog; the accepted ones still get served
+    (close() flushes), bitwise-correct."""
+    L = mats[0]
+    n = L.n_rows
+    rng = np.random.default_rng(11)
+    with SolveService(
+        max_batch=64, max_wait_us=60_000_000, max_queue=4, strategy=STRATEGY
+    ) as svc:
+        fp = svc.register(L)
+        accepted, rejected = [], []
+        for _ in range(10):
+            b = rng.standard_normal(n).astype(np.float32)
+            t = svc.submit(fp, b)
+            (rejected if t.rejected else accepted).append((t, b))
+            assert svc._batcher.depth() <= 4  # the bound actually holds
+        assert len(accepted) == 4 and len(rejected) == 6
+        for t, _ in rejected:
+            assert t.done() and t.version == -1
+            with pytest.raises(QueueFullError, match="max_queue=4"):
+                t.result(1)
+        snap = svc.stats()
+        assert snap["rejected"] == 6
+        assert snap["per_pattern"][fp]["rejected"] == 6
+    # close() drained the accepted requests; nothing was dropped
+    for t, b in accepted:
+        x = t.result(60)
+        assert np.array_equal(
+            x, direct_reference(t.served_by, b, t.batch_width,
+                                t.batch_position)
+        )
+
+
+def test_backpressure_unbounded_by_default_and_validates_bound(mats):
+    with pytest.raises(ValueError, match="max_queue"):
+        SolveService(max_queue=0)
+    with SolveService(
+        max_batch=4, max_wait_us=1000, strategy=STRATEGY
+    ) as svc:  # no max_queue: nothing rejects
+        fp = svc.register(mats[0])
+        tickets = [
+            svc.submit(fp, np.ones(mats[0].n_rows)) for _ in range(12)
+        ]
+        for t in tickets:
+            assert not t.rejected
+            t.result(60)
+        assert svc.stats()["rejected"] == 0
+
+
+def test_open_loop_reports_rejections(mats):
+    """Loadgen separates back-pressure rejections from errors: an
+    open-loop burst against a tiny bound rejects the overflow and the
+    served remainder still validates bitwise."""
+    with SolveService(
+        max_batch=64, max_wait_us=300_000, max_queue=2, strategy=STRATEGY
+    ) as svc:
+        patterns = [(svc.register(mats[0]), mats[0].n_rows)]
+        sampler = make_sampler(patterns, "uniform", seed=13)
+        # rate far above the 0.3s batch deadline: all 10 submissions land
+        # while the first batch is still held, so everything past the
+        # bound must bounce; the held batch then dispatches and validates.
+        report = run_open_loop(
+            svc, sampler, rate_hz=100_000.0, n_requests=10, validate=True
+        )
+    assert report["rejected"] == 8  # 2 admitted, 8 bounced
+    assert report["errors"] == 0
+    assert report["bitwise_mismatches"] == 0
+    assert report["completed"] == 2
 
 
 def test_worker_failure_propagates_to_tickets(mats):
