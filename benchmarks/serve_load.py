@@ -1,19 +1,29 @@
 """Serving throughput — pattern-routed microbatching vs one-at-a-time.
 
-Replays request mixes over the 9-matrix autotune corpus through
-``repro.serve.SolveService`` and reports, per mix:
+Replays request mixes through ``repro.serve.SolveService`` and reports,
+per mix:
 
-  * **batched**  — the real service (``max_batch`` > 1, microbatching);
+  * **batched**  — the real service (``max_batch`` > 1, microbatching;
+    the ``width`` mix additionally enables width-class cross-pattern
+    batching);
   * **baseline** — the same service machinery with ``max_batch=1``
     (every request is its own solve: the one-request-at-a-time floor);
   * **speedup**  — batched/baseline solves-per-second, with p50/p99
     latency for both.
 
-Mixes (``repro.serve.loadgen``): ``hot`` (geometric skew — the regime
-the paper's §7.7 amortization argument targets, acceptance bar: >= 2x),
-``uniform``, and ``adversarial`` (many distinct cold patterns — nothing
-coalesces; reported so the cost of the worst case is visible, not
-asserted).
+Mixes (``repro.serve.loadgen``): ``hot`` (geometric skew over the
+9-matrix autotune corpus — the regime the paper's §7.7 amortization
+argument targets, acceptance bar: >= 2x), ``uniform``, ``adversarial``
+(many distinct cold patterns — nothing coalesces; reported so the cost
+of the worst case is visible, not asserted), and ``width`` (several
+structurally-identical patterns in ONE width class — classic
+per-fingerprint routing cannot coalesce them, width-class batching
+groups them into single vmapped solves; acceptance bar: >= 1.5x).
+
+``--sweep-workers 1,2`` additionally scales the batched configuration
+over worker counts per mix (the n_workers x mix study): acceptance is
+that multi-worker throughput never drops below 0.7x the single-worker
+run (workers own distinct routes; more workers must not serialize).
 
 Warm-up compiles every (plan, batch-width) XLA variant and then resets
 the telemetry, so measured percentiles reflect steady-state serving.
@@ -21,7 +31,7 @@ Output: human table + ``repro-bench-rows/v1`` JSON (``--json``), the
 same schema as ``benchmarks.run --json``.
 
   PYTHONPATH=src:. python -m benchmarks.serve_load --json serve.json
-  PYTHONPATH=src:. python -m benchmarks.serve_load --smoke   # CI: validate
+  PYTHONPATH=src:. python -m benchmarks.serve_load --smoke --workers 2
 """
 from __future__ import annotations
 
@@ -34,7 +44,6 @@ from benchmarks.common import geomean, write_json_rows
 from repro.pipeline import PlanCache
 from repro.serve import (
     SolveService,
-    pad_width,
     patterns_for_mix,
     pretty,
     run_closed_loop,
@@ -48,21 +57,22 @@ DEFAULTS = dict(
     max_wait_us=2000,
     n_clients=32,
     requests_per_client=25,
+    n_workers=1,
     strategy="auto",
     backend="scan",
 )
 
+# acceptance bars: batched vs one-at-a-time throughput per asserted mix
+ACCEPT = {"hot": 2.0, "width": 1.5}
+
 
 def _warm(service: SolveService, patterns) -> None:
-    """Compile every (plan, pow2 batch width) XLA variant up front, then
-    zero the telemetry so measurements see steady state."""
-    widths = sorted(
-        {pad_width(m, service.max_batch) for m in range(1, service.max_batch + 1)}
-    )
-    for fp, n in patterns:
-        solver = service.pattern(fp).solver_for(service.pattern(fp).current)
-        for w in widths:
-            np.asarray(solver.solve(np.zeros((n, w), np.float32)))
+    """Compile every (plan, batch width) XLA variant serving can
+    dispatch — including the banked grouped variants when width-class
+    batching is on — then zero the telemetry so measurements see steady
+    state."""
+    del patterns  # the service knows its own registrations
+    service.prewarm()
     service.metrics.reset()
 
 
@@ -74,6 +84,8 @@ def _measure(
     max_wait_us: int,
     n_clients: int,
     requests_per_client: int,
+    n_workers: int,
+    width_class: bool,
     strategy: str,
     backend: str,
     validate: bool,
@@ -82,6 +94,8 @@ def _measure(
     with SolveService(
         max_batch=max_batch,
         max_wait_us=max_wait_us,
+        n_workers=n_workers,
+        width_class_batching=width_class,
         cache=cache,
         strategy=strategy,
         backend=backend,
@@ -105,20 +119,21 @@ def run(csv_rows, *, smoke: bool = False, opts: dict = None) -> dict:
     if smoke:
         o.update(n_clients=16, requests_per_client=8)
     validate = smoke or o.pop("validate", False)
+    sweep_workers = o.pop("sweep_workers", None)
     cache = PlanCache()  # shared: baseline re-uses the batched run's plans
     out = {}
     print(
         f"# serve_load — corpus serving, {o['n_clients']} clients x "
         f"{o['requests_per_client']} reqs, max_batch={o['max_batch']}, "
-        f"max_wait={o['max_wait_us']}us, strategy={o['strategy']}, "
-        f"backend={o['backend']}"
+        f"max_wait={o['max_wait_us']}us, workers={o['n_workers']}, "
+        f"strategy={o['strategy']}, backend={o['backend']}"
     )
     print(
         f"{'mix':12s} {'mode':9s} {'solves/s':>9s} {'p50 us':>9s} "
         f"{'p99 us':>10s} {'mean batch':>11s} {'mismatch':>9s}"
     )
     speedups = []
-    for mix in ("hot", "uniform", "adversarial"):
+    for mix in ("hot", "uniform", "adversarial", "width"):
         per_mode = {}
         for mode, mb in (("batched", o["max_batch"]), ("baseline", 1)):
             rep = _measure(
@@ -128,6 +143,10 @@ def run(csv_rows, *, smoke: bool = False, opts: dict = None) -> dict:
                 max_wait_us=o["max_wait_us"],
                 n_clients=o["n_clients"],
                 requests_per_client=o["requests_per_client"],
+                n_workers=o["n_workers"],
+                # the width mix is the cross-pattern regime; grouping is
+                # meaningless at max_batch=1, so the baseline skips it
+                width_class=(mix == "width" and mode == "batched"),
                 strategy=o["strategy"],
                 backend=o["backend"],
                 validate=validate,
@@ -174,12 +193,76 @@ def run(csv_rows, *, smoke: bool = False, opts: dict = None) -> dict:
         + ", ".join(f"{m}={s:.2f}x" for m, s in speedups)
         + f", geomean={geomean([s for _, s in speedups]):.2f}x"
     )
-    hot = dict(speedups)["hot"]
-    print(
-        f"hot-mix acceptance (>=2x batched vs one-at-a-time): "
-        f"{'PASS' if hot >= 2.0 else 'MISS'} ({hot:.2f}x)"
-    )
+    by_mix = dict(speedups)
+    for mix, bar in ACCEPT.items():
+        s = by_mix[mix]
+        print(
+            f"{mix}-mix acceptance (>={bar:g}x batched vs one-at-a-time): "
+            f"{'PASS' if s >= bar else 'MISS'} ({s:.2f}x)"
+        )
+    if sweep_workers:
+        out["worker_sweep"] = run_worker_sweep(
+            csv_rows, sweep_workers, o, cache=cache, validate=validate
+        )
     return out
+
+
+def run_worker_sweep(
+    csv_rows, workers_list, o: dict, *, cache: PlanCache, validate: bool
+) -> dict:
+    """The n_workers x mix scaling study: batched configuration only,
+    throughput per worker count. Distinct routes dispatch to distinct
+    workers, so adding workers must never serialize a mix — acceptance:
+    every multi-worker run >= 0.7x its single-worker throughput (GIL-
+    bound small solves cannot promise speedups; regressions they CAN
+    promise to avoid)."""
+    sweep = {}
+    print(f"\n# worker sweep — n_workers in {workers_list}")
+    print(f"{'mix':12s} " + " ".join(f"{f'w={w}':>10s}" for w in workers_list))
+    ok = True
+    for mix in ("hot", "uniform", "adversarial", "width"):
+        row = {}
+        for nw in workers_list:
+            rep = _measure(
+                mix,
+                cache=cache,
+                max_batch=o["max_batch"],
+                max_wait_us=o["max_wait_us"],
+                n_clients=o["n_clients"],
+                requests_per_client=o["requests_per_client"],
+                n_workers=nw,
+                width_class=(mix == "width"),
+                strategy=o["strategy"],
+                backend=o["backend"],
+                validate=validate,
+            )
+            row[nw] = rep["solves_per_sec"]
+            csv_rows.append(
+                (
+                    f"serve.sweep.{mix}.w{nw}",
+                    round(1e6 / max(rep["solves_per_sec"], 1e-9), 1),
+                    round(rep["solves_per_sec"] / max(row[workers_list[0]], 1e-9), 3),
+                )
+            )
+        print(
+            f"{mix:12s} "
+            + " ".join(f"{row[w]:10.1f}" for w in workers_list)
+        )
+        base = row[workers_list[0]]
+        for nw in workers_list[1:]:
+            if row[nw] < 0.7 * base:
+                ok = False
+                print(
+                    f"  !! {mix}: n_workers={nw} fell to "
+                    f"{row[nw] / max(base, 1e-9):.2f}x of "
+                    f"n_workers={workers_list[0]}"
+                )
+        sweep[mix] = row
+    print(
+        "worker-sweep acceptance (multi-worker >= 0.7x single-worker): "
+        f"{'PASS' if ok else 'MISS'}"
+    )
+    return sweep
 
 
 def main(argv=None) -> None:
@@ -200,6 +283,15 @@ def main(argv=None) -> None:
         "--requests", type=int, default=DEFAULTS["requests_per_client"],
         help="requests per client",
     )
+    ap.add_argument(
+        "--workers", type=int, default=DEFAULTS["n_workers"],
+        help="service worker threads",
+    )
+    ap.add_argument(
+        "--sweep-workers", metavar="N,N,...", default=None,
+        help="additionally run the batched config at each worker count "
+        "(the n_workers x mix scaling study)",
+    )
     ap.add_argument("--strategy", default=DEFAULTS["strategy"])
     ap.add_argument("--backend", default=DEFAULTS["backend"])
     args = ap.parse_args(argv)
@@ -212,6 +304,10 @@ def main(argv=None) -> None:
             max_wait_us=args.max_wait_us,
             n_clients=args.clients,
             requests_per_client=args.requests,
+            n_workers=args.workers,
+            sweep_workers=[int(x) for x in args.sweep_workers.split(",")]
+            if args.sweep_workers
+            else None,
             strategy=args.strategy,
             backend=args.backend,
             validate=args.validate,

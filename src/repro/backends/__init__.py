@@ -28,6 +28,7 @@ Module map:
 from repro.backends.base import Backend, BoundSolve, masked_value_gather
 from repro.backends.registry import (
     available_backends,
+    backends_with,
     bind,
     get_backend,
     register_backend,
@@ -44,6 +45,7 @@ __all__ = [
     "BoundSolve",
     "masked_value_gather",
     "available_backends",
+    "backends_with",
     "bind",
     "get_backend",
     "register_backend",

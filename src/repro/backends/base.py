@@ -98,6 +98,51 @@ class BoundSolve(abc.ABC):
     n: int  # problem size (scratch row excluded)
     n_entries: int  # entry count update_values data must match
 
+    # width-class grouping: True when this bound can solve one rhs per
+    # plan in a single fused dispatch. Requires the compiled solve graph
+    # to depend only on the plan tensor SHAPES — the scan backend
+    # qualifies (step_bounds never enter its trace); backends whose
+    # graph bakes in plan contents (distributed superstep bounds, pallas
+    # grids) must leave this False. Advertising it is a THREE-method
+    # contract: ``solve_grouped`` (stack-per-call; the replay/reference
+    # path) plus ``stack_bank``/``solve_bank`` (the serving fast path —
+    # ``repro.pipeline.GroupBank`` dispatches through them, so a backend
+    # that only implements ``solve_grouped`` must not set this flag).
+    supports_grouped: bool = False
+
+    @classmethod
+    def solve_grouped(cls, bounds, b_cols):
+        """Solve lane j of ``b_cols`` f[g, n] (plan row order) against
+        ``bounds[j]`` — one dispatch for the whole group. All bounds must
+        share one width class (identical plan tensor shapes, same dtype).
+        Returns x f[g, n]. Only meaningful when ``supports_grouped``."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support width-class "
+            "grouped solves"
+        )
+
+    @classmethod
+    def stack_bank(cls, bounds, perms, invs):
+        """Stack one width class's bounds into an opaque device bank
+        (lane axis first) with per-lane row permutations ``perms``/
+        ``invs`` — restacked only when membership changes. Returned
+        value is backend-defined; it is only ever passed back to
+        ``solve_bank``."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support width-class "
+            "grouped solves (no bank support)"
+        )
+
+    @classmethod
+    def solve_bank(cls, bank, lane_idx, B):
+        """Solve column j of ``B`` f[n, m] (caller row order) against
+        bank lane ``lane_idx[j]``; returns x f[n, m] (caller order),
+        bitwise-identical to ``solve_grouped`` on the same lanes."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support width-class "
+            "grouped solves (no bank support)"
+        )
+
     def _check_data(self, data: np.ndarray) -> np.ndarray:
         """Reject mis-sized update data. The device gather clamps
         out-of-range indices (same hazard solve() guards against for b),
@@ -148,4 +193,12 @@ class Backend(abc.ABC):
     def requires(self) -> Tuple[str, ...]:
         """Names of binding params this backend cannot run without
         (e.g. ``("mesh",)`` for the distributed backend)."""
+        return ()
+
+    def capabilities(self) -> Tuple[str, ...]:
+        """Optional feature names this backend's bounds implement beyond
+        the core contract. Known capabilities: ``"grouped"`` — the bound
+        solves one rhs per plan in a single width-class dispatch
+        (``BoundSolve.solve_grouped``; the serve layer's cross-pattern
+        microbatching keys on it)."""
         return ()

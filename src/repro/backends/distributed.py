@@ -68,8 +68,12 @@ class DistributedBoundSolve(BoundSolve):
                 fn = self._jitted.setdefault(Bp, fn)
         with self._mesh:
             x = fn(*self._args, jnp.asarray(b_pad, self._np_dtype))
-        x = np.asarray(x)[:, : self.n]
-        return jnp.asarray(x[0] if single else x[:B].T)
+        # slice/transpose on device — pulling the sharded result through
+        # np.asarray and re-uploading it would round-trip host memory per
+        # batch; the caller materializes the returned array exactly once
+        # (return type consistent with the scan/pallas backends)
+        x = x[:, : self.n]
+        return x[0] if single else x[:B].T
 
     def update_values(self, data: np.ndarray) -> "DistributedBoundSolve":
         import jax.numpy as jnp

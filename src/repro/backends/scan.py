@@ -15,6 +15,10 @@ from repro.backends.registry import register_backend
 
 class ScanBoundSolve(BoundSolve):
     backend = "scan"
+    # the scan trace reads only the plan tensor shapes (step_bounds never
+    # enter it), so structurally-identical plans can share one vmapped
+    # dispatch — the serve layer's width-class cross-pattern batching
+    supports_grouped = True
 
     def __init__(self, pa, val_src, diag_src, np_dtype, n_entries):
         self._pa = pa  # solver.executor.PlanArrays (device-resident)
@@ -28,6 +32,24 @@ class ScanBoundSolve(BoundSolve):
         from repro.solver.executor import solve_with_plan
 
         return solve_with_plan(self._pa, b)
+
+    @classmethod
+    def solve_grouped(cls, bounds, b_cols):
+        from repro.solver.executor import solve_with_plan_group
+
+        return solve_with_plan_group([b._pa for b in bounds], b_cols)
+
+    @classmethod
+    def stack_bank(cls, bounds, perms, invs):
+        from repro.solver.executor import stack_plan_bank
+
+        return stack_plan_bank([b._pa for b in bounds], perms, invs)
+
+    @classmethod
+    def solve_bank(cls, bank, lane_idx, B):
+        from repro.solver.executor import solve_with_bank
+
+        return solve_with_bank(bank, lane_idx, B)
 
     def update_values(self, data: np.ndarray) -> "ScanBoundSolve":
         import jax.numpy as jnp
@@ -68,6 +90,9 @@ class ScanBackend(Backend):
     single chip, so `step_bounds` is ignored here."""
 
     name = "scan"
+
+    def capabilities(self):
+        return ("grouped",)
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
              interpret=None, mesh=None) -> ScanBoundSolve:

@@ -30,7 +30,12 @@ from repro.pipeline.registry import (
     register_scheduler,
     schedule,
 )
-from repro.pipeline.solver import TriangularSolver, factor_pair
+from repro.pipeline.solver import (
+    GroupBank,
+    TriangularSolver,
+    factor_pair,
+    grouped_solve,
+)
 
 # the cheap pattern handle (re-exported so serving clients can fingerprint
 # once and submit by handle without importing the sparse layer)
@@ -45,6 +50,8 @@ __all__ = [
     "get_scheduler",
     "register_scheduler",
     "schedule",
+    "GroupBank",
     "TriangularSolver",
     "factor_pair",
+    "grouped_solve",
 ]

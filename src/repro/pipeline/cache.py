@@ -63,6 +63,13 @@ class PlanCache:
         self._selections_max = max(4 * maxsize, 64) if maxsize else 4096
         # keys exempt from LRU eviction (live-serving plans — see pin())
         self._pinned: set = set()
+        # width-class index: structural solve-graph identity -> the plan
+        # keys sharing it (``TriangularSolver.width_class``). Lets the
+        # serve layer discover which cached plans can ride one grouped
+        # dispatch and surfaces class sizes in telemetry. Index entries
+        # leave with their plan (LRU eviction drops them too), so the
+        # index stays bounded by the live entry set under pattern churn.
+        self._width_classes: "OrderedDict[Hashable, set]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -124,10 +131,22 @@ class PlanCache:
             return
         for key in [k for k in self._entries if k not in self._pinned]:
             self._entries.pop(key)
+            self._drop_width_class_locked(key)
             self.stats.evictions += 1
             over -= 1
             if over <= 0:
                 break
+
+    def _drop_width_class_locked(self, key: Hashable) -> None:
+        """Remove ``key`` from the width-class index (and drop classes
+        that emptied) — keeps the index bounded by the live entries."""
+        for wc in [
+            wc for wc, keys in self._width_classes.items() if key in keys
+        ]:
+            keys = self._width_classes[wc]
+            keys.discard(key)
+            if not keys:
+                del self._width_classes[wc]
 
     # --------------------------------------------------- eviction-safe pins
     def pin(self, key: Hashable) -> None:
@@ -150,6 +169,24 @@ class PlanCache:
         with self._lock:
             return frozenset(self._pinned)
 
+    # ------------------------------------------------- width-class index
+    def note_width_class(self, width_class: Hashable, key: Hashable) -> None:
+        """Record that plan ``key`` belongs to ``width_class`` (the
+        structural solve-graph identity from
+        ``TriangularSolver.width_class``). Idempotent."""
+        with self._lock:
+            self._width_classes.setdefault(width_class, set()).add(key)
+
+    def width_class_members(self, width_class: Hashable) -> frozenset:
+        with self._lock:
+            return frozenset(self._width_classes.get(width_class, ()))
+
+    def width_class_sizes(self) -> dict:
+        """{width_class: member count} — classes with >1 member are the
+        cross-pattern batching opportunities."""
+        with self._lock:
+            return {wc: len(keys) for wc, keys in self._width_classes.items()}
+
     def replace(self, key: Hashable, entry: object) -> None:
         """Swap the canonical entry for ``key`` (e.g. after a value
         refresh). No-op on the stats; the key must already exist or the
@@ -167,3 +204,4 @@ class PlanCache:
             self._entries.clear()
             self._selections.clear()
             self._pinned.clear()
+            self._width_classes.clear()

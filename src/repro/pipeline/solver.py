@@ -28,8 +28,9 @@ numeric values (paper §7.7's regime).
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -171,6 +172,38 @@ class TriangularSolver:
         """The backend ``BoundSolve`` this solver executes through
         (telemetry via ``bound.describe()``)."""
         return self._bound
+
+    @property
+    def width_class(self) -> tuple:
+        """Structural identity of this solver's compiled solve graph:
+        two solvers with equal width classes execute identically-shaped
+        ``ExecPlan`` tensors through the same backend binding, so they
+        share every compiled XLA variant — and, when the backend
+        supports it, their requests can ride one grouped dispatch
+        (``grouped_solve``; the serve layer's cross-pattern batching).
+        Orientation (``lower``) is deliberately excluded: it only
+        changes the host-side permutation, never the solve graph."""
+        p = self.exec_plan
+        return (
+            p.n,
+            p.n_steps,
+            p.k,
+            p.W,
+            tuple(int(x) for x in p.step_bounds),
+        ) + binding_fingerprint(
+            backend=self.backend,
+            dtype=self.dtype,
+            width=p.W,
+            steps_per_tile=self._steps_per_tile,
+            interpret=self._interpret,
+            mesh=self._mesh,
+        )
+
+    @property
+    def supports_grouping(self) -> bool:
+        """True when this solver's backend can serve width-class grouped
+        solves (one fused dispatch, one plan per column)."""
+        return bool(getattr(self._bound, "supports_grouped", False))
 
     # ---------------------------------------------------------- solving
     def solve(self, b):
@@ -441,6 +474,156 @@ class TriangularSolver:
             cache.replace(key, solver)
             cache.note_numeric_update()
         return solver
+
+
+def grouped_solve(solvers, B) -> jnp.ndarray:
+    """Solve column j of ``B`` f[n, m] with ``solvers[j]`` — one fused
+    width-class dispatch (``BoundSolve.solve_grouped``), each column
+    against its own plan tensors (pattern AND values may differ per
+    column; only the tensor shapes must match — equal ``width_class``).
+
+    Per-column permutations are applied/undone here, so columns may even
+    mix orientations. The compiled variant is cached per (width class,
+    group width): a serving mix of structurally-identical patterns pays
+    for log2(max_batch) compilations total, not per pattern.
+
+    Bitwise contract: vmap lanes are data-independent, so a column's
+    bits depend only on its own (plan, b) — never on what the neighbor
+    columns hold. The replay reference for a grouped result is therefore
+    the same call with the request's own solver replicated into every
+    lane (``repro.serve.service.GroupReplay``)."""
+    if not solvers:
+        raise ValueError("grouped_solve needs at least one solver")
+    wc = solvers[0].width_class
+    for s in solvers[1:]:
+        if s.width_class != wc:
+            raise ValueError(
+                "grouped_solve requires one width class; got solvers "
+                f"with {s.width_class} vs {wc}"
+            )
+    bound0 = solvers[0]._bound
+    if not getattr(bound0, "supports_grouped", False):
+        raise NotImplementedError(
+            f"backend {solvers[0].backend!r} does not support width-class "
+            "grouped solves"
+        )
+    B = jnp.asarray(B, solvers[0].dtype)
+    if B.ndim != 2 or B.shape[0] != solvers[0].n or B.shape[1] != len(solvers):
+        raise ValueError(
+            f"B must be [n={solvers[0].n}, m={len(solvers)}] (one column "
+            f"per solver); got {B.shape}"
+        )
+    b_cols = jnp.stack(
+        [B[:, j][s._perm] for j, s in enumerate(solvers)]
+    )
+    X = type(bound0).solve_grouped([s._bound for s in solvers], b_cols)
+    return jnp.stack(
+        [X[j][s._inv] for j, s in enumerate(solvers)], axis=1
+    )
+
+
+class GroupBank:
+    """Device-side bank of one width class's live plans — the serving
+    fast path for cross-pattern grouped batches.
+
+    ``grouped_solve`` restacks plan tensors on every call (fine for
+    replay/verification); a bank stacks each member ONCE
+    (``executor.stack_plan_bank``) and lets every microbatch index its
+    lanes inside a single jitted call (``executor.solve_with_bank``) —
+    bitwise-identical results, an order of magnitude less per-dispatch
+    overhead. Members are keyed by caller-chosen hashable keys (the
+    serve layer uses ``(fingerprint, version)``); adding or dropping a
+    member invalidates the stack, which is rebuilt lazily on the next
+    solve (lane count pads to a power of two, bounding compile churn as
+    plan versions come and go).
+
+    Backend-agnostic: the bank dispatches through the ``BoundSolve``
+    bank contract (``stack_bank``/``solve_bank``), which every backend
+    advertising ``supports_grouped`` must implement — today that is the
+    scan backend, the one whose compiled graph is shape-only."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._solvers: Dict = {}  # key -> solver; dict order = lane order
+        self._index: Dict = {}
+        self._bank = None
+        self.rebuilds = 0  # telemetry: restacks actually performed
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._solvers)
+
+    def add(self, key, solver: "TriangularSolver") -> None:
+        """Register ``solver`` under ``key`` (idempotent). The solver
+        must support grouping and share the bank's width class."""
+        if not solver.supports_grouping:
+            raise NotImplementedError(
+                f"backend {solver.backend!r} does not support width-class "
+                "grouped solves"
+            )
+        with self._lock:
+            if key in self._solvers:
+                return
+            if self._solvers:
+                wc0 = next(iter(self._solvers.values())).width_class
+                if solver.width_class != wc0:
+                    raise ValueError(
+                        "GroupBank requires one width class; got "
+                        f"{solver.width_class} vs {wc0}"
+                    )
+            self._solvers[key] = solver
+            self._bank = None
+
+    def drop(self, key) -> None:
+        with self._lock:
+            if self._solvers.pop(key, None) is not None:
+                self._bank = None
+
+    def prune(self, keep) -> None:
+        """Drop every member whose key fails ``keep(key)`` — the serve
+        layer retires lanes of superseded, drained plan versions.
+        ``keep`` runs under the bank lock, serialized with concurrent
+        ``add``s (callers rely on that for liveness checks)."""
+        with self._lock:
+            dead = [k for k in self._solvers if not keep(k)]
+            for k in dead:
+                del self._solvers[k]
+            if dead:
+                self._bank = None
+
+    def _ensure_locked(self):
+        if self._bank is None:
+            solvers = list(self._solvers.values())
+            cls = type(solvers[0]._bound)
+            self._bank = cls.stack_bank(
+                [s._bound for s in solvers],
+                [s._perm for s in solvers],
+                [s._inv for s in solvers],
+            )
+            self._bound_cls = cls
+            self._index = {k: i for i, k in enumerate(self._solvers)}
+            self.rebuilds += 1
+        return self._bound_cls, self._bank, self._index
+
+    def solve(self, keys, B) -> jnp.ndarray:
+        """Solve column j of ``B`` f[n, m] (caller row order) against
+        the member registered under ``keys[j]``; returns x f[n, m].
+        Bitwise-identical to ``grouped_solve`` on the same members
+        (property-tested), so ``GroupReplay`` remains the replay
+        reference for bank-served results."""
+        with self._lock:
+            cls, bank, index = self._ensure_locked()
+            lane_idx = np.fromiter(
+                (index[k] for k in keys), np.int32, count=len(keys)
+            )
+        return cls.solve_bank(bank, lane_idx, B)
+
+    def describe(self) -> dict:
+        with self._lock:
+            return {
+                "n_lanes": len(self._solvers),
+                "rebuilds": self.rebuilds,
+            }
 
 
 def factor_pair(lf: CSRMatrix, *, cache: Optional[PlanCache] = None, **kw):

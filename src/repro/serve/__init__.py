@@ -5,7 +5,14 @@ Turn a stream of independent solve requests into few large batched
 solves: requests sharing a sparsity pattern are coalesced (pattern-routed
 microbatching) into one multi-RHS ``solve(B[n, m])`` against the cached
 plan, and factor values can be swapped live between microbatches without
-corrupting queued work (version-pinned plans).
+corrupting queued work (version-pinned plans). With
+``width_class_batching=True`` the coalescing widens to *structurally
+identical* patterns (one ``TriangularSolver.width_class``): columns from
+different patterns/versions ride one grouped vmapped dispatch, each
+solved against its own plan tensors. ``backend="distributed"`` +
+``mesh=...`` serves through the mesh-sharded executor with batches
+aligned to the mesh's ``data`` axis; ``n_workers>1`` executes distinct
+routes concurrently.
 
     from repro.serve import SolveService
 
@@ -23,7 +30,7 @@ Module map:
   * ``metrics`` — per-pattern + global telemetry (``ServeMetrics``)
   * ``loadgen`` — request-mix load generator (hot / uniform / adversarial)
 """
-from repro.serve.batcher import MicroBatcher, pad_width
+from repro.serve.batcher import MicroBatcher, normalize_max_batch, pad_width
 from repro.serve.loadgen import (
     MIXES,
     adversarial_patterns,
@@ -33,9 +40,11 @@ from repro.serve.loadgen import (
     patterns_for_mix,
     run_closed_loop,
     run_open_loop,
+    width_class_patterns,
 )
 from repro.serve.metrics import LatencyReservoir, ServeMetrics, pretty
 from repro.serve.service import (
+    GroupReplay,
     QueueFullError,
     SolveService,
     SolveTicket,
@@ -45,6 +54,7 @@ from repro.serve.updates import VersionedPlans
 
 __all__ = [
     "MicroBatcher",
+    "normalize_max_batch",
     "pad_width",
     "MIXES",
     "adversarial_patterns",
@@ -54,9 +64,11 @@ __all__ = [
     "patterns_for_mix",
     "run_closed_loop",
     "run_open_loop",
+    "width_class_patterns",
     "LatencyReservoir",
     "ServeMetrics",
     "pretty",
+    "GroupReplay",
     "QueueFullError",
     "SolveService",
     "SolveTicket",

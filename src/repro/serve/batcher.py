@@ -27,27 +27,46 @@ from collections import OrderedDict
 from typing import Hashable, List, Optional, Tuple
 
 
+def normalize_max_batch(max_batch: int) -> int:
+    """The effective batch cap: ``max_batch`` rounded DOWN to a power of
+    two (24 -> 16). The serving contract promises at most
+    ``log2(max_batch)`` compiled XLA variants per plan shape — a non-pow2
+    cap would dispatch a non-pow2 width the moment a group fills,
+    breaking that bound, so the cap is quantized once at construction
+    (``SolveService`` / ``MicroBatcher``) and everything downstream sees
+    only the normalized value."""
+    if max_batch < 1:
+        raise ValueError("max_batch must be >= 1")
+    return 1 << (int(max_batch).bit_length() - 1)
+
+
 def pad_width(m: int, max_batch: int) -> int:
     """Batch width actually dispatched for ``m`` queued requests: the next
-    power of two >= max(m, 2), capped at ``max_batch``. ``max_batch=1``
-    (the no-batching baseline) is the one width-1 escape hatch."""
-    if max_batch <= 1:
+    power of two >= max(m, 2), capped at ``normalize_max_batch(max_batch)``
+    — every dispatched width is a power of two, keeping the
+    log2(max_batch) compiled-variant bound exact. ``max_batch=1`` (the
+    no-batching baseline) is the one width-1 escape hatch."""
+    cap = normalize_max_batch(max_batch)
+    if cap <= 1:
         return 1
     w = 2
     while w < m:
         w *= 2
-    return min(w, max_batch)
+    return min(w, cap)
 
 
 class MicroBatcher:
     """Thread-safe grouping queue: ``put(route, item)`` from any number of
-    producers, ``next_batch()`` from worker threads. FIFO within a route;
-    across routes the fullest-then-oldest group dispatches first."""
+    producers, ``next_batch()`` from worker threads. FIFO within a route.
+    Across routes the dispatch order is: any FULL group first (the first
+    one found, in route-insertion order — not the fullest), otherwise the
+    group whose oldest item's ``max_wait_us`` deadline expires first.
+    ``max_batch`` is normalized to a power of two at construction
+    (``normalize_max_batch``), so dispatched group sizes always respect
+    the pow2 width quantization."""
 
     def __init__(self, *, max_batch: int = 32, max_wait_us: int = 2000):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self.max_batch = max_batch
+        self.max_batch = normalize_max_batch(max_batch)
         self.max_wait = max_wait_us / 1e6
         self._cond = threading.Condition()
         self._groups: "OrderedDict[Hashable, List]" = OrderedDict()

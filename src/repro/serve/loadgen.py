@@ -37,9 +37,9 @@ from repro.serve.service import (
     SolveTicket,
     direct_reference,
 )
-from repro.sparse.generators import erdos_renyi_lower
+from repro.sparse.generators import erdos_renyi_lower, shifted_coupling_lower
 
-MIXES = ("hot", "uniform", "adversarial")
+MIXES = ("hot", "uniform", "adversarial", "width")
 
 
 def corpus_patterns(
@@ -75,6 +75,40 @@ def adversarial_patterns(
     return out
 
 
+def width_class_patterns(
+    service: SolveService,
+    n_patterns: int = 6,
+    *,
+    n: int = 96,
+    stride: int = 8,
+    seed: int = 0,
+    **plan_kwargs,
+) -> List[Tuple[str, int]]:
+    """``n_patterns`` structurally DISTINCT matrices that land in ONE
+    width class (``sparse.generators.shifted_coupling_lower`` — same
+    ``ExecPlan`` shapes under a level scheduler): the regime where
+    cross-pattern batching coalesces requests that classic
+    per-fingerprint routing cannot. Asserts the class actually formed —
+    a scheduler whose plan shapes depend on the shift values would
+    silently degrade the mix into ``adversarial``."""
+    if n_patterns > stride - 1:
+        raise ValueError(
+            f"at most stride-1={stride - 1} distinct shifts exist"
+        )
+    out = []
+    for j in range(n_patterns):
+        m = shifted_coupling_lower(n, j, stride=stride, seed=seed + j)
+        out.append((service.register(m, **plan_kwargs), m.n_rows))
+    classes = {service.pattern(fp).width_class for fp, _ in out}
+    if len(classes) != 1:
+        raise AssertionError(
+            f"width-class family split into {len(classes)} classes — "
+            "plan with a level scheduler (strategy='wavefront') so the "
+            "plan shapes stay shift-invariant"
+        )
+    return out
+
+
 def patterns_for_mix(
     service: SolveService,
     mix: str,
@@ -84,15 +118,23 @@ def patterns_for_mix(
     **plan_kwargs,
 ):
     """One-stop setup for a named mix: registers the right pattern set
-    (corpus for hot/uniform, distinct ER matrices for adversarial) and
-    returns ``(patterns, sampler)``. Shared by ``benchmarks.serve_load``
-    and the ``repro.launch.solver_serve`` CLI so the two can never
-    diverge on what a mix means."""
+    (corpus for hot/uniform, distinct ER matrices for adversarial, one
+    width-class family for width) and returns ``(patterns, sampler)``.
+    Shared by ``benchmarks.serve_load`` and the
+    ``repro.launch.solver_serve`` CLI so the two can never diverge on
+    what a mix means."""
     if mix == "adversarial":
         patterns = adversarial_patterns(
             service, n_adversarial, seed=seed, **plan_kwargs
         )
         kind = "uniform"  # adversity is the pattern count, not the skew
+    elif mix == "width":
+        # the family needs shift-invariant plan shapes: pin a level
+        # scheduler unless the caller chose one explicitly
+        patterns = width_class_patterns(
+            service, seed=seed, **{"strategy": "wavefront", **plan_kwargs}
+        )
+        kind = "uniform"  # structure is shared; traffic is spread
     else:
         patterns = corpus_patterns(service, **plan_kwargs)
         kind = mix

@@ -90,6 +90,8 @@ class ServeMetrics:
         with self._lock:
             self._patterns: Dict[str, _PatternStats] = {}
             self._solve = LatencyReservoir()  # per-batch device solve time
+            self._grouped_batches = 0  # cross-pattern width-class batches
+            self._grouped_hist: Counter = Counter()
             self._t_first: Optional[float] = None
             self._t_last: Optional[float] = None
 
@@ -131,12 +133,47 @@ class ServeMetrics:
             p.queue_wait.extend(queue_waits)
             p.e2e.extend(e2e)
             self._solve.add(solve_seconds)
-            self._t_last = time.perf_counter()
+            self._mark_completion_locked()
+
+    def record_grouped_batch(
+        self,
+        fps,
+        *,
+        queue_waits,
+        e2e,
+        solve_seconds: float,
+    ) -> None:
+        """One width-class grouped batch: request j came from pattern
+        ``fps[j]`` (``queue_waits``/``e2e`` aligned). Completions and
+        latencies are attributed per pattern; the batch itself is counted
+        once, globally, as a grouped batch — attributing it to any single
+        pattern would misstate that pattern's batching."""
+        with self._lock:
+            for fp, qw, el in zip(fps, queue_waits, e2e):
+                p = self._pat(fp)
+                p.completed += 1
+                p.queue_wait.add(qw)
+                p.e2e.add(el)
+            self._grouped_batches += 1
+            self._grouped_hist[len(fps)] += 1
+            self._solve.add(solve_seconds)
+            self._mark_completion_locked()
 
     def record_failure(self, fp: str, size: int) -> None:
         with self._lock:
             self._pat(fp).failed += size
-            self._t_last = time.perf_counter()
+            self._mark_completion_locked()
+
+    def _mark_completion_locked(self) -> None:
+        """Advance the throughput window. The window is anchored on the
+        FIRST recorded event — submit or completion, whichever comes
+        first: a batch draining after ``reset()`` (warm-up) used to set
+        ``_t_last`` while ``_t_first`` stayed None, making every later
+        snapshot report 0.0 solves/s despite completions."""
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        self._t_last = now
 
     # ----------------------------------------------------------- snapshot
     def snapshot(self, *, queue_depth: int = 0, extra: dict = None) -> dict:
@@ -177,6 +214,10 @@ class ServeMetrics:
                 if self._t_first is not None
                 else 0.0
             )
+            # width-class grouped batches are counted once, globally (the
+            # per-pattern loop above only saw their per-request shares)
+            tot_batches += self._grouped_batches
+            hist.update(self._grouped_hist)
             out = {
                 "submitted": tot_sub,
                 "completed": tot_done,
@@ -184,6 +225,10 @@ class ServeMetrics:
                 "rejected": tot_rej,
                 "queue_depth": queue_depth,
                 "batches": tot_batches,
+                "grouped_batches": self._grouped_batches,
+                "grouped_batch_size_hist": dict(
+                    sorted(self._grouped_hist.items())
+                ),
                 "mean_batch_size": round(tot_done / tot_batches, 2)
                 if tot_batches
                 else 0.0,
@@ -211,7 +256,8 @@ def pretty(snap: dict) -> str:
         f"queue depth {snap['queue_depth']})",
         f"throughput: {snap['solves_per_sec']} solves/s over "
         f"{snap['elapsed_seconds']}s in {snap['batches']} batches "
-        f"(mean batch {snap['mean_batch_size']})",
+        f"(mean batch {snap['mean_batch_size']}, "
+        f"{snap.get('grouped_batches', 0)} cross-pattern)",
         f"latency us: {snap['latency_us']}  "
         f"queue wait us: {snap['queue_wait_us']}",
         f"batch size hist: {snap['batch_size_hist']}",

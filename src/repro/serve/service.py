@@ -34,14 +34,16 @@ solve admissions are.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
+from collections import Counter
 from typing import Dict, Optional, Union
 
 import numpy as np
 
-from repro.pipeline import PlanCache, TriangularSolver
-from repro.serve.batcher import MicroBatcher, pad_width
+from repro.pipeline import GroupBank, PlanCache, TriangularSolver, grouped_solve
+from repro.serve.batcher import MicroBatcher, normalize_max_batch, pad_width
 from repro.serve.metrics import ServeMetrics, pretty
 from repro.serve.updates import VersionedPlans
 from repro.sparse.csr import CSRMatrix, pattern_fingerprint
@@ -115,6 +117,35 @@ class _Request:
         self.b = b
 
 
+class GroupReplay:
+    """The bitwise reference solver for a width-class-grouped result.
+
+    A cross-pattern grouped batch executes each column against its own
+    plan through the vmapped grouped kernel, whose compiled graph differs
+    from the plain multi-RHS path — so the replay for such a ticket is
+    the SAME grouped kernel with the request's own solver replicated into
+    every lane. Lane independence (a vmap lane's bits depend only on its
+    own plan and rhs — property-tested) makes this reproduce the served
+    bits exactly at the recorded (width, position). Exposes ``solve(B)``
+    so ``direct_reference`` works on grouped tickets unchanged."""
+
+    __slots__ = ("solver",)
+
+    def __init__(self, solver: TriangularSolver):
+        self.solver = solver
+
+    def solve(self, B):
+        B = np.asarray(B)
+        return grouped_solve([self.solver] * B.shape[1], B)
+
+
+def _width_class_label(wc) -> str:
+    """Stable short handle for a width-class tuple — JSON dict keys in
+    ``stats()`` (the raw tuple is neither a string nor hash-stable
+    across processes)."""
+    return "wc-" + hashlib.sha1(repr(wc).encode()).hexdigest()[:12]
+
+
 def direct_reference(
     solver: TriangularSolver, b, width: int = 2, position: int = 0
 ) -> np.ndarray:
@@ -139,12 +170,21 @@ class SolveService:
 
     Parameters mirror the two serving knobs plus the plan binding:
     ``max_batch`` / ``max_wait_us`` bound each microbatch's size and
-    latency cost; ``max_queue`` bounds the admission backlog (None =
-    unbounded; at the bound, submits come back ``rejected`` instead of
-    growing the queue); ``n_workers`` executes batches concurrently
-    (distinct routes only — one batch owns its whole route group);
-    everything in ``plan_defaults`` (strategy, backend, dtype, k, ...)
-    flows to ``TriangularSolver.plan`` at registration.
+    latency cost (``max_batch`` is normalized DOWN to a power of two —
+    the log2 compiled-variant bound); ``max_queue`` bounds the admission
+    backlog (None = unbounded; at the bound, submits come back
+    ``rejected`` instead of growing the queue); ``n_workers`` executes
+    batches concurrently (distinct routes only — one batch owns its
+    whole route group); ``width_class_batching=True`` routes requests by
+    structural plan identity instead of (pattern, version), so
+    structurally-identical patterns coalesce into one grouped multi-RHS
+    solve (scan backend; each column keeps its own pattern/values and
+    its bitwise (width, position) contract via ``GroupReplay``);
+    everything in ``plan_defaults`` (strategy, backend, dtype, k, mesh,
+    ...) flows to ``TriangularSolver.plan`` at registration. With
+    ``backend="distributed"`` the worker loop additionally rounds each
+    dispatch width up to a multiple of the mesh's ``data`` axis, so
+    batches shard cleanly instead of padding inside the backend.
     """
 
     def __init__(
@@ -154,21 +194,36 @@ class SolveService:
         max_wait_us: int = 2000,
         max_queue: Optional[int] = None,
         n_workers: int = 1,
+        width_class_batching: bool = False,
         cache: Optional[PlanCache] = None,
         strategy: str = "auto",
         **plan_defaults,
     ):
-        self.max_batch = max_batch
+        self.max_batch = normalize_max_batch(max_batch)
         if max_queue is not None and max_queue < 1:
             raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         self.max_queue = max_queue
+        self.width_class_batching = width_class_batching
         self.cache = cache if cache is not None else PlanCache()
         self._plan_defaults = dict(strategy=strategy, **plan_defaults)
+        # mesh-sharded serving: batches shard over the mesh's 'data' axis,
+        # so the worker loop aligns dispatch widths to it up front
+        mesh = plan_defaults.get("mesh")
+        self._mesh = mesh
+        self._batch_align = (
+            int(dict(mesh.shape).get("data", 1))
+            if mesh is not None
+            and plan_defaults.get("backend") == "distributed"
+            else 1
+        )
         self._patterns: Dict[str, VersionedPlans] = {}
+        self._width_classes: Dict[tuple, set] = {}  # wc -> fingerprints
+        self._banks: Dict[tuple, GroupBank] = {}  # wc -> device bank
         self._pinned_keys: set = set()  # released at close()
+        self._pins_released = False
         self._plock = threading.Lock()
         self._batcher = MicroBatcher(
-            max_batch=max_batch, max_wait_us=max_wait_us
+            max_batch=self.max_batch, max_wait_us=max_wait_us
         )
         self.metrics = ServeMetrics()
         self._closed = False
@@ -179,6 +234,7 @@ class SolveService:
             )
             for i in range(max(n_workers, 1))
         ]
+        self.n_workers = len(self._workers)
         for w in self._workers:
             w.start()
 
@@ -214,12 +270,29 @@ class SolveService:
             )
             if solver.plan_key is not None:
                 self.cache.pin(solver.plan_key)
+                self.cache.note_width_class(
+                    solver.width_class, solver.plan_key
+                )
                 with self._plock:
-                    self._pinned_keys.add(solver.plan_key)
+                    # a close() that already released the pins will never
+                    # run again for this key — racing past the _closed
+                    # check above must not leak an eternal pin into a
+                    # shared cache
+                    too_late = self._pins_released
+                    if not too_late:
+                        self._pinned_keys.add(solver.plan_key)
+                if too_late:
+                    self.cache.unpin(solver.plan_key)
+                    raise RuntimeError("service is closed")
             with self._plock:
                 vp = self._patterns.get(fp)
                 if vp is None:
-                    self._patterns[fp] = VersionedPlans(solver, lower=lower)
+                    vp = VersionedPlans(solver, lower=lower)
+                    self._patterns[fp] = vp
+                    if vp.width_class is not None:
+                        self._width_classes.setdefault(
+                            vp.width_class, set()
+                        ).add(fp)
                     return fp
         if vp.lower != lower:  # racing registration with other orientation
             raise ValueError(
@@ -293,8 +366,16 @@ class SolveService:
         version, _ = vp.admit()
         ticket = SolveTicket(fp, version)
         self.metrics.record_submit(fp)
+        # width-class routing coalesces structurally-identical plans into
+        # one grouped dispatch; each request still pins (and is served
+        # by) its own (pattern, version) — the route only widens WHO can
+        # share a batch, never what values a column sees
+        if self.width_class_batching and vp.groupable:
+            route = ("wc", vp.width_class)
+        else:
+            route = (fp, version)
         try:
-            self._batcher.put((fp, version), _Request(ticket, b))
+            self._batcher.put(route, _Request(ticket, b))
         except RuntimeError:
             vp.complete(version)
             raise
@@ -338,53 +419,226 @@ class SolveService:
             item = self._batcher.next_batch()
             if item is None:
                 return
-            (fp, version), reqs = item
-            vp = self._patterns[fp]
-            t0 = time.perf_counter()
-            try:
-                solver = vp.solver_for(version)
-                m = len(reqs)
-                B = np.stack([r.b for r in reqs], axis=1)
-                w = pad_width(m, self.max_batch)
-                if w > m:
-                    B = np.concatenate(
-                        [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
-                    )
-                X = np.asarray(solver.solve(B))
-                t1 = time.perf_counter()
-                for j, r in enumerate(reqs):
-                    r.ticket.batch_width = w
-                    r.ticket.batch_position = j
-                    r.ticket.served_by = solver
-                    r.ticket._fulfill(np.ascontiguousarray(X[:, j]))
-                self.metrics.record_batch(
-                    fp,
-                    m,
-                    queue_waits=[t0 - r.ticket.t_submit for r in reqs],
-                    e2e=[r.ticket.t_done - r.ticket.t_submit for r in reqs],
-                    solve_seconds=t1 - t0,
+            route, reqs = item
+            if route and route[0] == "wc":
+                self._serve_group(route[1], reqs)
+            else:
+                fp, version = route
+                self._serve_plain(fp, version, reqs)
+
+    def _dispatch_width(self, m: int) -> int:
+        """The batch width actually dispatched for ``m`` requests: pow2
+        quantization (``pad_width``) then — mesh-sharded serving — round
+        UP to a multiple of the mesh's ``data`` axis, so the distributed
+        backend shards the batch instead of padding it internally. Still
+        at most log2(max_batch) distinct widths."""
+        w = pad_width(m, self.max_batch)
+        if self._batch_align > 1:
+            w = -(-w // self._batch_align) * self._batch_align
+        return w
+
+    def _serve_plain(self, fp: str, version: int, reqs) -> None:
+        """One (pattern, version) microbatch — the classic multi-RHS
+        path; every column shares one solver."""
+        vp = self._patterns[fp]
+        t0 = time.perf_counter()
+        try:
+            solver = vp.solver_for(version)
+            m = len(reqs)
+            B = np.stack([r.b for r in reqs], axis=1)
+            w = self._dispatch_width(m)
+            if w > m:
+                B = np.concatenate(
+                    [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
                 )
-            except Exception as e:  # scatter the failure, keep serving
-                for r in reqs:
-                    r.ticket._fulfill(None, e)
-                self.metrics.record_failure(fp, len(reqs))
-            finally:
-                vp.complete(version, len(reqs))
+            X = np.asarray(solver.solve(B))
+            t1 = time.perf_counter()
+            for j, r in enumerate(reqs):
+                r.ticket.batch_width = w
+                r.ticket.batch_position = j
+                r.ticket.served_by = solver
+                r.ticket._fulfill(np.ascontiguousarray(X[:, j]))
+            self.metrics.record_batch(
+                fp,
+                m,
+                queue_waits=[t0 - r.ticket.t_submit for r in reqs],
+                e2e=[r.ticket.t_done - r.ticket.t_submit for r in reqs],
+                solve_seconds=t1 - t0,
+            )
+        except Exception as e:  # scatter the failure, keep serving
+            for r in reqs:
+                r.ticket._fulfill(None, e)
+            self.metrics.record_failure(fp, len(reqs))
+        finally:
+            vp.complete(version, len(reqs))
+
+    def _serve_group(self, wc, reqs) -> None:
+        """One width-class microbatch: columns may come from different
+        patterns and plan versions (one solver per column), executed
+        through the class's device-side ``GroupBank`` — one jitted call,
+        no per-dispatch tensor stacking. A group that happens to be
+        homogeneous takes the plain path — same bits, same
+        ``direct_reference`` contract as before."""
+        req_keys = [
+            (r.ticket.fingerprint, r.ticket.version) for r in reqs
+        ]
+        if len(set(req_keys)) == 1:
+            fp, version = req_keys[0]
+            self._serve_plain(fp, version, reqs)
+            return
+        t0 = time.perf_counter()
+        try:
+            solvers = [
+                self._patterns[fp].solver_for(version)
+                for fp, version in req_keys
+            ]
+            bank = self._banks.setdefault(wc, GroupBank())
+            for key, solver in zip(req_keys, solvers):
+                bank.add(key, solver)
+            # retire bank lanes of drained, superseded versions (their
+            # VersionedPlans entry is gone, so they can never dispatch).
+            # Liveness is queried INSIDE the prune (under the bank lock,
+            # serialized with concurrent adds) — a hoisted snapshot could
+            # go stale against another worker's just-added lane and drop
+            # it: any in-flight batch pins its versions, so a
+            # query-at-prune-time can never see them as dead.
+            fps_touched = {fp for fp, _ in req_keys}
+            bank.prune(
+                lambda k: k[0] not in fps_touched
+                or k[1] in self._patterns[k[0]].live_versions()
+            )
+            m = len(reqs)
+            w = self._dispatch_width(m)
+            B = np.stack([r.b for r in reqs], axis=1)
+            keys = list(req_keys)
+            if w > m:
+                B = np.concatenate(
+                    [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
+                )
+                keys = keys + [keys[0]] * (w - m)  # padding lanes
+            X = np.asarray(bank.solve(keys, B))
+            t1 = time.perf_counter()
+            for j, r in enumerate(reqs):
+                r.ticket.batch_width = w
+                r.ticket.batch_position = j
+                r.ticket.served_by = GroupReplay(solvers[j])
+                r.ticket._fulfill(np.ascontiguousarray(X[:, j]))
+            self.metrics.record_grouped_batch(
+                [r.ticket.fingerprint for r in reqs],
+                queue_waits=[t0 - r.ticket.t_submit for r in reqs],
+                e2e=[r.ticket.t_done - r.ticket.t_submit for r in reqs],
+                solve_seconds=t1 - t0,
+            )
+        except Exception as e:  # scatter the failure, keep serving
+            for r in reqs:
+                r.ticket._fulfill(None, e)
+            for fp, cnt in Counter(
+                r.ticket.fingerprint for r in reqs
+            ).items():
+                self.metrics.record_failure(fp, cnt)
+        finally:
+            done = Counter(
+                (r.ticket.fingerprint, r.ticket.version) for r in reqs
+            )
+            for (fp, version), cnt in done.items():
+                self._patterns[fp].complete(version, cnt)
+
+    # ------------------------------------------------------------- warm-up
+    def prewarm(self) -> None:
+        """Compile every XLA variant serving can dispatch — per pattern,
+        each pow2 (data-axis-aligned) batch width; per width class with
+        cross-pattern batching on, the banked grouped variant at each
+        width. Benchmarks call this before measuring so steady-state
+        percentiles never include compile time."""
+        widths = sorted(
+            {
+                self._dispatch_width(m)
+                for m in range(1, self.max_batch + 1)
+            }
+        )
+        with self._plock:
+            patterns = list(self._patterns.items())
+            classes = {
+                wc: sorted(fps)
+                for wc, fps in self._width_classes.items()
+            }
+        for fp, vp in patterns:
+            solver = vp.current_solver()
+            dtype = np.dtype(solver.dtype)
+            for w in widths:
+                np.asarray(solver.solve(np.zeros((vp.n, w), dtype)))
+        if not self.width_class_batching:
+            return
+        for wc, fps in classes.items():
+            groupable = [
+                fp for fp in fps if self._patterns[fp].groupable
+            ]
+            if len(groupable) < 2:
+                continue
+            bank = self._banks.setdefault(wc, GroupBank())
+            keys = []
+            for fp in groupable:
+                vp = self._patterns[fp]
+                # one atomic read: (version, solver) must pair up, or a
+                # racing numeric_update could register a lane keyed by
+                # the old version holding the new version's values
+                version, solver = vp.current_entry()
+                key = (fp, version)
+                bank.add(key, solver)
+                keys.append(key)
+            n = self._patterns[groupable[0]].n
+            dtype = np.dtype(
+                self._patterns[groupable[0]].current_solver().dtype
+            )
+            for w in widths:
+                lanes = [keys[j % len(keys)] for j in range(w)]
+                np.asarray(bank.solve(lanes, np.zeros((n, w), dtype)))
 
     # ------------------------------------------------------------ lifecycle
-    def close(self, timeout: Optional[float] = None) -> None:
-        """Stop admissions, drain the queue, join the workers."""
-        if self._closed:
-            return
+    def close(self, timeout: Optional[float] = None) -> dict:
+        """Stop admissions, drain the queue, join the workers; release
+        the plan-cache eviction pins only once every worker has actually
+        exited. A worker still alive after ``timeout`` may hold an
+        in-flight batch against a pinned plan — unpinning then would let
+        LRU eviction race the batch — so the pins are RETAINED and
+        reported instead; call ``close()`` again (it is idempotent and
+        retries the join) once the stall clears.
+
+        Returns a report dict: ``workers_alive`` (names of workers that
+        missed the timeout), ``pins_released``, ``pins_retained``."""
         self._closed = True
         self._batcher.close()
+        deadline = (
+            None if timeout is None else time.perf_counter() + timeout
+        )
+        stuck = []
         for w in self._workers:
-            w.join(timeout)
+            if deadline is None:
+                w.join()
+            else:
+                w.join(max(0.0, deadline - time.perf_counter()))
+            if w.is_alive():
+                stuck.append(w.name)
+        if stuck:
+            with self._plock:
+                retained = len(self._pinned_keys)
+            return {
+                "workers_alive": stuck,
+                "pins_released": 0,
+                "pins_retained": retained,
+            }
         # release the eviction pins — a shared PlanCache outliving this
         # service must regain its normal LRU behavior
-        for key in self._pinned_keys:
+        with self._plock:
+            keys, self._pinned_keys = self._pinned_keys, set()
+            self._pins_released = True
+        for key in keys:
             self.cache.unpin(key)
-        self._pinned_keys.clear()
+        return {
+            "workers_alive": [],
+            "pins_released": len(keys),
+            "pins_retained": 0,
+        }
 
     def __enter__(self) -> "SolveService":
         return self
@@ -403,19 +657,49 @@ class SolveService:
         # crash the telemetry thread
         with self._plock:
             patterns = list(self._patterns.items())
+            width_classes = {
+                wc: sorted(fps) for wc, fps in self._width_classes.items()
+            }
+        wc_labels = {wc: _width_class_label(wc) for wc in width_classes}
         return self.metrics.snapshot(
             queue_depth=self._batcher.depth(),
             extra={
+                "serving": {
+                    "n_workers": self.n_workers,
+                    "workers_alive": sum(
+                        w.is_alive() for w in self._workers
+                    ),
+                    "max_batch": self.max_batch,
+                    "batch_align": self._batch_align,
+                    "width_class_batching": self.width_class_batching,
+                    "mesh": dict(self._mesh.shape)
+                    if self._mesh is not None
+                    else None,
+                },
                 "plan_cache": {
                     **cs.as_dict(),
                     "hit_rate": round(cs.hits / looked_up, 3)
                     if looked_up
                     else 0.0,
                 },
+                # classes with >1 pattern are live cross-pattern batching
+                # opportunities (the width mix's whole premise)
+                "width_classes": {
+                    wc_labels[wc]: {
+                        "n_patterns": len(fps),
+                        "patterns": fps,
+                        # bank telemetry: live device lanes + restacks
+                        "bank": self._banks[wc].describe()
+                        if wc in self._banks
+                        else None,
+                    }
+                    for wc, fps in width_classes.items()
+                },
                 "patterns": {
                     fp: {
                         "versions_alive": vp.live_versions(),
                         "current_version": vp.current,
+                        "width_class": wc_labels.get(vp.width_class),
                         # the backend BoundSolve's own telemetry (shapes,
                         # device bytes, compiled variants) — registry
                         # backends all speak describe(); current_solver()

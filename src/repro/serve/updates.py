@@ -34,6 +34,12 @@ class VersionedPlans:
         self.fingerprint = solver.fingerprint
         self.lower = lower
         self.n = solver.n
+        # structural solve-graph identity + grouping capability — shared
+        # by every version (updates clone values, never the structure),
+        # so they are computed once here. The serve batcher routes on
+        # width_class when cross-pattern batching is enabled.
+        self.width_class = getattr(solver, "width_class", None)
+        self.groupable = bool(getattr(solver, "supports_grouping", False))
         self._lock = threading.Lock()
         self._versions: Dict[int, object] = {0: solver}
         self._pins: Dict[int, int] = {0: 0}
@@ -60,6 +66,15 @@ class VersionedPlans:
         the two reads (telemetry's KeyError hazard)."""
         with self._lock:
             return self._versions[self.current]
+
+    def current_entry(self):
+        """``(version, solver)`` read under ONE lock acquisition.
+        Callers that need the pair (e.g. keying a bank lane by version)
+        must not read ``current`` and ``current_solver()`` separately —
+        an ``update`` between the two reads would pair the old version
+        number with the new solver's values."""
+        with self._lock:
+            return self.current, self._versions[self.current]
 
     def complete(self, version: int, count: int = 1) -> None:
         """Unpin ``count`` requests from ``version``; retire superseded

@@ -51,8 +51,7 @@ def plan_arrays(plan: ExecPlan, dtype=jnp.float32) -> PlanArrays:
     )
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _solve_scan(row_ids, col_idx, vals, diag, accum, b_pad, n):
+def _scan_single(row_ids, col_idx, vals, diag, accum, b_pad, n):
     x0 = jnp.zeros(n + 1, dtype=b_pad.dtype)
     acc0 = jnp.zeros(row_ids.shape[1], dtype=b_pad.dtype)
 
@@ -75,6 +74,115 @@ def _solve_scan(row_ids, col_idx, vals, diag, accum, b_pad, n):
         step, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
     )
     return x[:n]
+
+
+# the single-RHS entry keeps its jitted name; the raw body stays callable
+# so the grouped executor can vmap it without nesting jits
+_solve_scan = partial(jax.jit, static_argnames=("n",))(_scan_single)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _solve_scan_grouped(row_ids, col_idx, vals, diag, accum, b_pad, n):
+    """Width-class grouped solve: every tensor carries a leading group
+    axis g — lane g runs the single-RHS scan on ITS OWN plan tensors
+    (``row_ids[g], col_idx[g], ...``) and rhs ``b_pad[g]``. The compiled
+    graph depends only on the stacked shapes ``(g, T, k, W, n)``, so one
+    XLA variant serves every combination of structurally-identical plans
+    (the serve layer's cross-pattern microbatching). Lanes are
+    data-independent: vmap batches the same op sequence per lane, so a
+    lane's bits never depend on what its neighbors hold (property-tested
+    in tests/test_serve_scaleout.py)."""
+    return jax.vmap(partial(_scan_single, n=n))(
+        row_ids, col_idx, vals, diag, accum, b_pad
+    )
+
+
+def solve_with_plan_group(pas, b_cols: jax.Array) -> jax.Array:
+    """Solve lane j of ``b_cols`` f[g, n] (already in plan row order)
+    against ``pas[j]`` — one vmapped traversal over the whole group. All
+    plans must share the same tensor shapes (one width class); returns
+    x f[g, n].
+
+    Stacks the plan tensors per call — fine for replay/verification; the
+    serving hot path amortizes the stacking through a ``BankTensors``
+    bank + ``_solve_scan_banked`` instead (bitwise-identical output,
+    asserted in tests/test_serve_scaleout.py)."""
+    dtype = pas[0].vals.dtype
+    b = jnp.asarray(b_cols, dtype)
+    b_pad = jnp.concatenate([b, jnp.zeros((b.shape[0], 1), dtype)], axis=1)
+    stacked = [
+        jnp.stack([getattr(pa, f) for pa in pas])
+        for f in ("row_ids", "col_idx", "vals", "diag", "accum")
+    ]
+    return _solve_scan_grouped(*stacked, b_pad, pas[0].n)
+
+
+class BankTensors(NamedTuple):
+    """A width class's plan tensors stacked ONCE on device (lane axis P
+    first) plus per-lane row permutations — the serving fast path for
+    cross-pattern grouped batches. Dispatches index lanes inside the jit
+    (``_solve_scan_banked``), so a microbatch costs one compiled call
+    with no per-dispatch stacking; the bank is only restacked when the
+    class membership changes (new pattern or plan version)."""
+
+    row_ids: jax.Array  # int32[P, T, k]
+    col_idx: jax.Array  # int32[P, T, k, W]
+    vals: jax.Array  # f[P, T, k, W]
+    diag: jax.Array  # f[P, T, k]
+    accum: jax.Array  # bool[P, T, k]
+    perm: jax.Array  # int32[P, n]  caller order -> plan row order
+    inv: jax.Array  # int32[P, n]  plan row order -> caller order
+
+
+def stack_plan_bank(pas, perms, invs) -> BankTensors:
+    """Stack one width class's plans into a ``BankTensors``. The lane
+    axis is padded UP to a power of two (repeating lane 0) so the jitted
+    banked solve compiles at most log2 bank-size variants as classes
+    grow and shrink with plan-version churn."""
+    P = len(pas)
+    pad = (1 << max(P - 1, 0).bit_length()) - P if P > 1 else 0
+    idx = list(range(P)) + [0] * pad
+    return BankTensors(
+        *(
+            jnp.stack([getattr(pas[i], f) for i in idx])
+            for f in ("row_ids", "col_idx", "vals", "diag", "accum")
+        ),
+        perm=jnp.stack([perms[i] for i in idx]),
+        inv=jnp.stack([invs[i] for i in idx]),
+    )
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _solve_scan_banked(
+    row_ids, col_idx, vals, diag, accum, perm, inv, lane_idx, B, n
+):
+    """The banked grouped solve: request j reads bank lane
+    ``lane_idx[j]`` — plan tensors AND its row permutation — solves, and
+    un-permutes, all inside one compiled call. ``B`` is f[n, m] in
+    caller row order; returns x f[n, m]. Bitwise-identical to
+    ``_solve_scan_grouped`` on the same lanes: the lane gathers and
+    permutations move bits unchanged, and the scan body is the same
+    vmapped ``_scan_single``."""
+    r = row_ids[lane_idx]
+    c = col_idx[lane_idx]
+    v = vals[lane_idx]
+    d = diag[lane_idx]
+    a = accum[lane_idx]
+    b = jnp.take_along_axis(B.T.astype(v.dtype), perm[lane_idx], axis=1)
+    b_pad = jnp.concatenate(
+        [b, jnp.zeros((b.shape[0], 1), b.dtype)], axis=1
+    )
+    x = jax.vmap(partial(_scan_single, n=n))(r, c, v, d, a, b_pad)
+    return jnp.take_along_axis(x, inv[lane_idx], axis=1).T
+
+
+def solve_with_bank(bank: BankTensors, lane_idx, B) -> jax.Array:
+    """Solve column j of ``B`` f[n, m] (caller order) against bank lane
+    ``lane_idx[j]``; returns x f[n, m] (caller order)."""
+    n = int(bank.perm.shape[1])
+    return _solve_scan_banked(
+        *bank, jnp.asarray(lane_idx, jnp.int32), jnp.asarray(B), n
+    )
 
 
 @partial(jax.jit, static_argnames=("n",))

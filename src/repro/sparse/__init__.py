@@ -27,6 +27,7 @@ from repro.sparse.generators import (
     poisson2d_matrix,
     poisson3d_matrix,
     random_spd_band,
+    shifted_coupling_lower,
 )
 from repro.sparse.ichol import ichol0
 
@@ -49,5 +50,6 @@ __all__ = [
     "poisson2d_matrix",
     "poisson3d_matrix",
     "random_spd_band",
+    "shifted_coupling_lower",
     "ichol0",
 ]

@@ -12,6 +12,7 @@ from _mesh import run_in_mesh_subprocess
 from repro.backends import (
     Backend,
     available_backends,
+    backends_with,
     get_backend,
     register_backend,
     unregister_backend,
@@ -40,6 +41,19 @@ def test_builtins_registered():
     assert set(available_backends()) == {"scan", "pallas", "distributed"}
     for name in available_backends():
         assert get_backend(name).name == name
+
+
+def test_grouped_capability_registry():
+    """Only the scan backend's compiled graph is shape-only, so only it
+    may advertise width-class grouping — the serve layer keys
+    cross-pattern batching on this."""
+    assert backends_with("grouped") == ("scan",)
+    assert backends_with("nonexistent-capability") == ()
+    from repro.backends.scan import ScanBoundSolve
+
+    assert ScanBoundSolve.supports_grouped
+    for name in ("pallas", "distributed"):
+        assert "grouped" not in get_backend(name).capabilities()
 
 
 def test_unknown_backend_rejected(planned):

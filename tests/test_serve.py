@@ -61,18 +61,22 @@ def service():
 # ----------------------------------------------------------- unit: batcher
 def test_pad_width_policy():
     assert [pad_width(m, 8) for m in (1, 2, 3, 4, 5, 8)] == [2, 2, 4, 4, 8, 8]
-    assert pad_width(9, 12) == 12  # capped at max_batch
+    # a non-pow2 cap quantizes DOWN: dispatching width 12 would break the
+    # documented log2(max_batch) compiled-variant bound
+    assert pad_width(9, 12) == 8
     assert pad_width(1, 1) == 1  # baseline escape hatch
     assert pad_width(5, 1) == 1
 
 
 def test_batcher_coalesces_and_splits():
     b = MicroBatcher(max_batch=3, max_wait_us=10_000_000)
+    assert b.max_batch == 2  # non-pow2 caps quantize down (pad_width bound)
     for i in range(7):
         b.put("r", i)
     assert b.depth() == 7
-    assert b.next_batch() == ("r", [0, 1, 2])  # full group, no wait
-    assert b.next_batch() == ("r", [3, 4, 5])
+    assert b.next_batch() == ("r", [0, 1])  # full group, no wait
+    assert b.next_batch() == ("r", [2, 3])
+    assert b.next_batch() == ("r", [4, 5])
     b.close()  # flush: the remainder comes out without its deadline
     assert b.next_batch() == ("r", [6])
     assert b.next_batch() is None
