@@ -15,6 +15,11 @@ N in {1e4, 1e5}:
     ``val_src``/``diag_src``; only the new entry data crosses to the
     device) against the old full rebind (retransfer of every [T, k, W]
     plan tensor), on the scan backend.
+  * **entry permutation** — the scatter/lexsort
+    ``pipeline.solver._entry_permutation`` (rebases ``val_src`` onto the
+    caller's entry order; runs once per plan) against the old float64
+    carrier-matrix path through ``permute_symmetric``, at N=1e6
+    (``--smoke``: N=1e4), checked element-for-element.
 
 Acceptance (ISSUE 4): vectorized compile >= 10x the reference at N=1e5.
 
@@ -43,9 +48,11 @@ from repro.core.plan import (
 )
 from repro.pipeline import schedule
 from repro.sparse import (
+    CSRMatrix,
     dag_from_lower_csr,
     erdos_renyi_lower,
     narrow_band_lower,
+    permute_symmetric,
 )
 
 K = 8
@@ -129,6 +136,49 @@ def _bench_point(name: str, L, *, reps_vec: int, reps_ref: int) -> dict:
     }
 
 
+def _bench_entry_perm(csv_rows, *, smoke: bool) -> dict:
+    """Time ``_entry_permutation`` (scatter + lexsort) against the old
+    float64-carrier path it replaced, on a banded pattern at N=1e6."""
+    from repro.pipeline.solver import _entry_permutation
+
+    n = 10_000 if smoke else 1_000_000
+    L = narrow_band_lower(n, 0.14, 10, seed=207)
+    perm = np.random.default_rng(0).permutation(n)
+
+    def carrier_ref():
+        # the pre-vectorization implementation: ride entry ids through
+        # permute_symmetric on a float64 carrier (ids exact below 2^53)
+        carrier = CSRMatrix(
+            n_rows=L.n_rows, n_cols=L.n_cols, indptr=L.indptr,
+            indices=L.indices, data=np.arange(L.nnz, dtype=np.float64),
+        )
+        return permute_symmetric(carrier, perm).data.astype(np.int64)
+
+    equal = bool(np.array_equal(_entry_permutation(L, perm), carrier_ref()))
+    reps = 5 if smoke else 3
+    t_vec = _median_time(lambda: _entry_permutation(L, perm), reps)
+    t_ref = _median_time(carrier_ref, reps)
+    tag = f"entry_perm.{n // 1000}k"
+    print(
+        f"{tag:22s} {L.nnz:9d} {t_vec*1e3:9.1f} {t_ref*1e3:10.1f} "
+        f"{t_ref/t_vec:7.1f}x {str(equal):>6s}"
+    )
+    csv_rows.append(
+        (f"inspector.{tag}.vec", round(t_vec * 1e6, 1),
+         round(t_ref / t_vec, 2))
+    )
+    csv_rows.append((f"inspector.{tag}.ref", round(t_ref * 1e6, 1), 1.0))
+    return {
+        "name": tag,
+        "n": n,
+        "nnz": L.nnz,
+        "vec_seconds": t_vec,
+        "ref_seconds": t_ref,
+        "speedup": t_ref / t_vec,
+        "bitwise_equal": equal,
+    }
+
+
 def run(csv_rows, *, smoke: bool = False) -> dict:
     sizes = (10_000,) if smoke else (10_000, 100_000)
     print(
@@ -182,6 +232,9 @@ def run(csv_rows, *, smoke: bool = False) -> dict:
                 (f"inspector.{tag}.update_rebind",
                  round(r["update_rebind_seconds"] * 1e6, 1), 1.0)
             )
+    ep = _bench_entry_perm(csv_rows, smoke=smoke)
+    out[ep["name"]] = ep
+    all_equal &= ep["bitwise_equal"]
     if not all_equal:
         raise SystemExit(
             "inspector_bench FAILED: vectorized plan is not bitwise-equal "

@@ -1,0 +1,209 @@
+"""Elastic-mode benchmark — barrier/step accounting + wall-clock,
+elastic vs bulk-synchronous (ISSUE 6).
+
+For each corpus family the driver plans the same schedule twice — once
+bulk-synchronous, once ``mode="elastic"`` — and reports, per matrix:
+
+  * the **certificate** numbers from ``ExecPlan.stats()["elastic"]``:
+    scan trip count T vs fused macro-steps ceil(T/slack)
+    (``step_fusion``), and superstep barriers vs readiness-fused
+    barriers (``barrier_fusion`` — the distributed-barrier certificate);
+  * the **model** numbers from the step-granular cost the autotuner's
+    elastic rule uses (``step_cost`` / ``elastic_cost``, §2.2 with
+    ``l_step`` per scan step instead of ``L`` per barrier);
+  * the **measured** median solve wall-clock of both bindings, with the
+    results checked bitwise-equal (an elastic solve that drifts is a
+    scheduling bug, not a rounding artifact — same op order by design).
+
+Deep-DAG regimes (chain, narrow band — where T dominates and the paper's
+barrier-count argument says BSP loses) are foregrounded at N=20k; the
+shallow/wide families ride along to show elastic is *safe* but not
+expected to win there.
+
+Output: human table + ``repro-bench-rows/v1`` JSON (``--json``), the
+same schema as ``benchmarks.run --json`` / ``benchmarks.inspector_bench``.
+
+  PYTHONPATH=src:. python -m benchmarks.table7e_elastic --json el.json
+  PYTHONPATH=src:. python -m benchmarks.table7e_elastic --smoke  # CI:
+      corpus-size matrices; asserts bitwise equality + >=2x step fusion
+      on the deep-DAG rows
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import time_callable, write_json_rows
+from repro.core import (
+    DEFAULT_SLACK,
+    elastic_cost,
+    step_cost,
+)
+from repro.pipeline import TriangularSolver, schedule
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    ichol0,
+    narrow_band_lower,
+    poisson2d_matrix,
+)
+from repro.sparse.csr import lower_triangle_of
+
+K = 8
+STRATEGY = "growlocal"
+# rows whose regime the autotuner's elastic rule targets — the smoke
+# acceptance (>= 2x step fusion) is asserted on exactly these
+DEEP = ("chain", "band_narrow", "band_wide")
+
+
+def _chain_lower(n: int, seed: int = 0) -> "object":
+    from repro.autotune.corpus import chain_lower
+
+    return chain_lower(n, seed=seed)
+
+
+def matrices(smoke: bool):
+    """(name, lower CSR, deep?) triples; deep-DAG families first."""
+    if smoke:
+        return [
+            ("chain", _chain_lower(2_000, seed=105), True),
+            ("band_narrow", narrow_band_lower(2_000, 0.14, 10, seed=103),
+             True),
+            ("band_wide", narrow_band_lower(2_000, 0.03, 42, seed=104),
+             True),
+            ("poisson2d_ichol", ichol0(poisson2d_matrix(26)), False),
+            ("er_dense", erdos_renyi_lower(500, 0.03, seed=102), False),
+        ]
+    return [
+        ("chain", _chain_lower(20_000, seed=105), True),
+        ("band_narrow", narrow_band_lower(20_000, 0.14, 10, seed=103), True),
+        ("band_wide", narrow_band_lower(20_000, 0.03, 42, seed=104), True),
+        ("poisson2d_ichol", ichol0(poisson2d_matrix(110)), False),
+        ("poisson2d_110", lower_triangle_of(poisson2d_matrix(110)), False),
+        ("er_dense", erdos_renyi_lower(12_000, 0.03 * 500 / 12_000, seed=102),
+         False),
+    ]
+
+
+def _bench_matrix(name: str, L, *, reps: int) -> dict:
+    bulk = TriangularSolver.plan(L, strategy=STRATEGY, k=K)
+    el = TriangularSolver.plan(L, strategy=STRATEGY, k=K, mode="elastic")
+    st = el.exec_plan.stats()["elastic"]
+
+    # the autotuner's step-granular model terms, on the same schedule
+    dag = dag_from_lower_csr(L)
+    s = schedule(dag, K, strategy=STRATEGY)
+    c_step = step_cost(dag, s)
+    c_elastic = elastic_cost(dag, s, DEFAULT_SLACK)
+
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(L.n_rows).astype(np.float32)
+    xb = np.asarray(bulk.solve(b))
+    xe = np.asarray(el.solve(b))
+    bitwise = bool(np.array_equal(xb, xe))
+
+    t_bulk = time_callable(lambda: np.asarray(bulk.solve(b)), reps=reps)
+    t_el = time_callable(lambda: np.asarray(el.solve(b)), reps=reps)
+
+    return {
+        "name": name,
+        "n": L.n_rows,
+        "nnz": L.nnz,
+        "slack": st["slack"],
+        "n_steps": st["n_steps"],
+        "n_macro_steps": st["n_macro_steps"],
+        "step_fusion": st["step_fusion"],
+        "n_supersteps": st["n_supersteps"],
+        "n_fused_supersteps": st["n_fused_supersteps"],
+        "barrier_fusion": st["barrier_fusion"],
+        "step_cost": c_step,
+        "elastic_cost": c_elastic,
+        "bitwise_equal": bitwise,
+        "bulk_seconds": t_bulk,
+        "elastic_seconds": t_el,
+        "speedup": t_bulk / t_el,
+    }
+
+
+def run(csv_rows, *, smoke: bool = False) -> dict:
+    reps = 3 if smoke else 7
+    print(
+        f"# table7e_elastic — mode='elastic' (slack={DEFAULT_SLACK}) vs "
+        f"bulk-synchronous, {STRATEGY} k={K} on the scan backend"
+        f"{' (smoke sizes)' if smoke else ''}"
+    )
+    print(
+        f"{'matrix':18s} {'n':>7s} {'T':>7s} {'macro':>6s} {'fuse':>6s} "
+        f"{'barr':>5s} {'bfuse':>6s} {'bulk ms':>9s} {'elast ms':>9s} "
+        f"{'speedup':>8s} {'equal':>6s}"
+    )
+    out = {}
+    deep_speedups = []
+    for name, L, deep in matrices(smoke):
+        r = _bench_matrix(name, L, reps=reps)
+        out[name] = r
+        print(
+            f"{name:18s} {r['n']:7d} {r['n_steps']:7d} "
+            f"{r['n_macro_steps']:6d} {r['step_fusion']:5.1f}x "
+            f"{r['n_supersteps']:5d} {r['barrier_fusion']:5.1f}x "
+            f"{r['bulk_seconds']*1e3:9.2f} {r['elastic_seconds']*1e3:9.2f} "
+            f"{r['speedup']:7.2f}x {str(r['bitwise_equal']):>6s}"
+        )
+        csv_rows.append(
+            (f"elastic.{name}.bulk", round(r["bulk_seconds"] * 1e6, 1), 1.0)
+        )
+        csv_rows.append(
+            (f"elastic.{name}.elastic",
+             round(r["elastic_seconds"] * 1e6, 1), round(r["speedup"], 3))
+        )
+        csv_rows.append(
+            (f"elastic.{name}.step_fusion", r["n_macro_steps"],
+             round(r["step_fusion"], 2))
+        )
+        if not r["bitwise_equal"]:
+            raise SystemExit(
+                f"table7e_elastic FAILED: elastic solve on {name!r} is not "
+                f"bitwise-equal to the bulk-synchronous solve"
+            )
+        if deep:
+            deep_speedups.append(r["speedup"])
+            if r["step_fusion"] < 2.0:
+                raise SystemExit(
+                    f"table7e_elastic FAILED: deep-DAG row {name!r} fused "
+                    f"only {r['step_fusion']:.2f}x (acceptance: >= 2x)"
+                )
+    print("bitwise equivalence (elastic vs bulk): PASS")
+    print(
+        f"deep-DAG acceptance (>= 2x step fusion on {', '.join(DEEP)}): PASS"
+    )
+    if not smoke:
+        from benchmarks.common import geomean
+
+        g = geomean(deep_speedups)
+        print(f"deep-DAG wall-clock speedup geomean: {g:.2f}x")
+        out["deep_geomean_speedup"] = g
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: corpus-size matrices; still asserts bitwise "
+        "equality and >=2x deep-DAG step fusion (exits non-zero on miss)",
+    )
+    args = ap.parse_args(argv)
+    csv_rows = []
+    out = run(csv_rows, smoke=args.smoke)
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    if args.json:
+        write_json_rows(args.json, csv_rows, ["elastic"], elastic=out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -43,6 +43,19 @@ Two stages, both inspectable:
     schedulers themselves optimize — keeping the first minimum
     (deterministic: the shortlist order is the tie-break).
 
+    With ``allow_elastic=True`` (the solver passes it when the target
+    backend advertises the ``"elastic"`` capability and the caller did
+    not force ``mode="bsp"``) a second, step-granular rule runs on the
+    winner: in the deep-DAG regimes ("serial", "banded") — where the
+    plan's scan trip count ``T`` (``schedule_step_count``), not the
+    barrier count, dominates single-chip wall-clock — elastic execution
+    is turned on (``options.slack = DEFAULT_SLACK``) whenever fusing
+    slack-sized runs shrinks the trip count at least 2x, i.e.
+    ``elastic_cost(dag, s, slack)`` halves the ``l_step`` term of
+    ``step_cost(dag, s)``. The selection's ``cost`` stays the winner's
+    ``bsp_cost`` — elastic changes how the schedule is *executed*, not
+    which schedule wins.
+
 ``resolve_auto`` wraps this for ``TriangularSolver.plan(strategy="auto")``
 and memoizes the outcome per (sparsity fingerprint, options, orientation)
 — in the passed ``PlanCache`` when there is one (so refactorizations skip
@@ -61,7 +74,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.autotune.features import MatrixFeatures, dag_features, matrix_features
-from repro.core import Schedule, bsp_cost
+from repro.core import DEFAULT_SLACK, Schedule, bsp_cost, schedule_step_count
 from repro.pipeline.registry import ScheduleOptions, get_scheduler
 from repro.sparse.csr import CSRMatrix, pattern_fingerprint
 from repro.sparse.dag import SolveDAG, dag_from_lower_csr
@@ -98,6 +111,7 @@ class Selection:
             "strategy": self.strategy,
             "regime": self.regime,
             "cost": self.cost,
+            "slack": self.options.slack,  # > 0 when elastic was enabled
             "candidates": [(c.strategy, c.cost) for c in self.candidates],
             "tuned": self.tuned,
             "timings": None if self.timings is None else list(self.timings),
@@ -154,13 +168,24 @@ def select_schedule(
     options: Optional[ScheduleOptions] = None,
     *,
     features: Optional[MatrixFeatures] = None,
+    allow_elastic: bool = False,
 ) -> Tuple[Selection, Schedule]:
     """Pick a strategy for ``dag``: classify -> shortlist -> score every
     candidate with ``bsp_cost`` -> first minimum wins. Returns the
     audit-friendly ``Selection`` together with the winning schedule (so
-    ``schedule(dag, strategy="auto")`` costs nothing extra)."""
+    ``schedule(dag, strategy="auto")`` costs nothing extra).
+
+    ``allow_elastic=True`` additionally applies the step-granular elastic
+    rule (module docstring): in the "serial"/"banded" regimes, when the
+    winning schedule's step count fuses >= 2x at ``DEFAULT_SLACK``, the
+    returned options carry ``slack=DEFAULT_SLACK`` so the solver binds
+    the elastic executor. The slack is applied to EVERY candidate's
+    options, not just the winner's — measured trials (``tune=True``)
+    rebuild the tuned Selection from whichever candidate wins the clock,
+    and that candidate must keep the elastic decision."""
     o = options or ScheduleOptions()
     f = features if features is not None else dag_features(dag)
+    regime = classify(f, o.k)
     best = None  # (cost, candidate, schedule)
     scored = []
     for c in shortlist(f, o):
@@ -170,11 +195,28 @@ def select_schedule(
         if best is None or cost < best[0]:
             best = (cost, scored[-1], s)
     cost, c, s = best
+    if allow_elastic and o.slack == 0 and regime in ("serial", "banded"):
+        # step-granular rule: elastic pays when the fused trip count
+        # ceil(T / slack) is at most half the plan's step count T (the
+        # l_step term of step_cost vs elastic_cost; critical work is
+        # identical, so comparing the fusion ratio IS comparing costs)
+        n_steps = schedule_step_count(s)
+        n_macro = -(-n_steps // DEFAULT_SLACK)
+        if n_steps >= 2 * n_macro:
+            scored = [
+                dataclasses.replace(
+                    sc, options=sc.options.replace(slack=DEFAULT_SLACK)
+                )
+                for sc in scored
+            ]
+            c = dataclasses.replace(
+                c, options=c.options.replace(slack=DEFAULT_SLACK)
+            )
     sel = Selection(
         strategy=c.strategy,
         options=c.options,
         cost=cost,
-        regime=classify(f, o.k),
+        regime=regime,
         features=f,
         candidates=tuple(scored),
     )
@@ -227,12 +269,15 @@ def _binding_key(plan_kwargs: Optional[dict]) -> tuple:
 
 def selection_key(
     fp: str, options: ScheduleOptions, lower: bool, tune: bool,
-    binding: Optional[tuple] = None,
+    binding: Optional[tuple] = None, elastic: bool = False,
 ) -> tuple:
     """Memo key for one auto-selection. ``binding`` (see ``_binding_key``)
     only matters for measured trials; the model-based path is binding-free.
-    """
-    return (fp, options, lower, tune, binding if tune else None)
+    ``elastic`` is the caller's ``allow_elastic`` flag — the same pattern
+    resolved for an elastic-capable binding and for one that cannot run
+    elastic (e.g. the distributed backend) must not share a memo entry,
+    or the slack decision would leak across backends."""
+    return (fp, options, lower, tune, binding if tune else None, elastic)
 
 
 def resolve_auto(
@@ -244,6 +289,7 @@ def resolve_auto(
     cache=None,
     fp: Optional[str] = None,
     plan_kwargs: Optional[dict] = None,
+    allow_elastic: bool = False,
 ) -> Selection:
     """Resolve ``strategy="auto"`` for matrix ``a`` to a concrete
     ``Selection``, memoized per sparsity fingerprint — in ``cache`` (a
@@ -252,7 +298,7 @@ def resolve_auto(
     """
     sel, _, _ = resolve_auto_full(
         a, options=options, lower=lower, tune=tune, cache=cache, fp=fp,
-        plan_kwargs=plan_kwargs,
+        plan_kwargs=plan_kwargs, allow_elastic=allow_elastic,
     )
     return sel
 
@@ -266,6 +312,7 @@ def resolve_auto_full(
     cache=None,
     fp: Optional[str] = None,
     plan_kwargs: Optional[dict] = None,
+    allow_elastic: bool = False,
 ) -> Tuple[Selection, Optional[Schedule], Optional[object]]:
     """``resolve_auto`` plus two cold-path artifacts for ``plan()``:
 
@@ -277,7 +324,9 @@ def resolve_auto_full(
     Both are None on a memo hit — the caller's plan cache already has, or
     will rebuild, the concrete plan."""
     fp = fp if fp is not None else pattern_fingerprint(a)
-    key = selection_key(fp, options, lower, tune, _binding_key(plan_kwargs))
+    key = selection_key(
+        fp, options, lower, tune, _binding_key(plan_kwargs), allow_elastic
+    )
     if cache is not None:
         sel = cache.get_selection(key)
     else:
@@ -293,7 +342,9 @@ def resolve_auto_full(
     m0, _ = mirror_to_lower(a, lower)
     dag = dag_from_lower_csr(m0)
     f = matrix_features(m0, dag=dag)
-    sel, winning_sched = select_schedule(dag, options, features=f)
+    sel, winning_sched = select_schedule(
+        dag, options, features=f, allow_elastic=allow_elastic
+    )
     winner_solver = None
     if tune:
         sel, winner_solver = _timed_refine(

@@ -185,10 +185,16 @@ class Backend(abc.ABC):
         steps_per_tile: int = 8,
         interpret=None,
         mesh=None,
+        slack: int = 0,
     ) -> BoundSolve:
         """Transfer ``exec_plan``'s tensors and return a ``BoundSolve``.
         Irrelevant parameters are accepted and ignored so callers can
-        pass one uniform binding-parameter set to every backend."""
+        pass one uniform binding-parameter set to every backend.
+
+        ``slack > 0`` requests ``mode="elastic"`` (bounded-slack
+        macro-step execution, see ``core.elastic``); backends that do
+        not advertise the ``"elastic"`` capability must raise a clear
+        error rather than silently fall back to bulk-synchronous."""
 
     def requires(self) -> Tuple[str, ...]:
         """Names of binding params this backend cannot run without
@@ -200,5 +206,7 @@ class Backend(abc.ABC):
         the core contract. Known capabilities: ``"grouped"`` — the bound
         solves one rhs per plan in a single width-class dispatch
         (``BoundSolve.solve_grouped``; the serve layer's cross-pattern
-        microbatching keys on it)."""
+        microbatching keys on it); ``"elastic"`` — ``bind(slack=s)``
+        executes the bounded-slack macro-step mode (``core.elastic``),
+        bitwise-identical to the bulk-synchronous bound."""
         return ()

@@ -163,12 +163,22 @@ class DistributedBackend(Backend):
         return ("mesh",)
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
-             interpret=None, mesh=None) -> DistributedBoundSolve:
+             interpret=None, mesh=None, slack=0) -> DistributedBoundSolve:
         import jax.numpy as jnp
 
         from repro.solver.distributed import dist_plan_spec
 
         del steps_per_tile, interpret  # no tiling; shard_map handles layout
+        if slack > 0:
+            # the elastic certificate's fused superstep bounds (the
+            # cross-device barrier schedule) are computed and reported by
+            # ExecPlan.stats(), but this executor still unrolls one
+            # all-gather per superstep — refuse rather than silently run
+            # bulk-synchronous under an elastic request
+            raise ValueError(
+                "backend='distributed' does not support mode='elastic' "
+                "(no 'elastic' capability); use the scan or pallas backend"
+            )
         if mesh is None:
             raise ValueError("backend='distributed' requires a mesh")
         np_dtype = np.dtype(dtype)

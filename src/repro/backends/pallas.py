@@ -76,16 +76,93 @@ class PallasBoundSolve(BoundSolve):
         }
 
 
+class ElasticPallasBoundSolve(BoundSolve):
+    """The ``mode="elastic"`` kernel bound: readiness waves replace the
+    per-step level barrier inside each tile (``sptrsv_pallas_elastic``),
+    bitwise-identical to ``PallasBoundSolve`` on the same plan."""
+
+    backend = "pallas"
+
+    def __init__(self, arrays, elastic, val_src, diag_src, *, n, n_entries,
+                 np_dtype, interpret):
+        # arrays = (wave_id, n_waves, row_ids, col_idx, vals, diag,
+        #           accum_mask), window-padded; tile size == slack
+        self._arrays = arrays
+        self._elastic = elastic  # core.elastic.ElasticPlan certificate
+        self._val_src = val_src
+        self._diag_src = diag_src
+        self.n = n
+        self.n_entries = n_entries
+        self._np_dtype = np_dtype
+        self._interpret = interpret
+
+    def solve(self, b):
+        from repro.kernels.ops import solve_with_elastic_kernel_arrays
+
+        return solve_with_elastic_kernel_arrays(
+            self._arrays, b, n=self.n,
+            steps_per_tile=self._elastic.slack,
+            interpret=self._interpret, dtype=self._np_dtype,
+        )
+
+    def update_values(self, data: np.ndarray) -> "ElasticPallasBoundSolve":
+        import jax.numpy as jnp
+
+        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
+        wave_id, n_waves, row_ids, col_idx, vals, diag, accum = self._arrays
+        vals, diag = masked_value_gather(
+            data, self._val_src, vals, self._diag_src, diag
+        )
+        return ElasticPallasBoundSolve(
+            (wave_id, n_waves, row_ids, col_idx, vals, diag, accum),
+            self._elastic,
+            self._val_src,
+            self._diag_src,
+            n=self.n,
+            n_entries=self.n_entries,
+            np_dtype=self._np_dtype,
+            interpret=self._interpret,
+        )
+
+    def describe(self) -> dict:
+        T, k = self._arrays[2].shape
+        W = self._arrays[3].shape[-1]
+        ep = self._elastic
+        return {
+            "backend": self.backend,
+            "mode": "elastic",
+            "n": self.n,
+            "n_steps": T,  # window-padded
+            "n_macro_steps": ep.n_macro_steps,
+            "slack": ep.slack,
+            "mean_waves_per_tile": float(ep.n_waves.mean()),
+            "k": k,
+            "W": W,
+            "dtype": np.dtype(self._np_dtype).name,
+            "steps_per_tile": ep.slack,
+            "interpret": bool(self._interpret),
+            "device_bytes": int(
+                sum(a.size * a.dtype.itemsize
+                    for a in self._arrays + (self._val_src, self._diag_src))
+            ),
+        }
+
+
 @register_backend
 class PallasBackend(Backend):
     """Grid-of-tiles Pallas kernel; x resident in VMEM, plan tensors
     streamed per tile. Interpret mode (CPU) executes the same kernel
-    logic through the Pallas interpreter."""
+    logic through the Pallas interpreter. ``bind(slack=s)`` switches to
+    the readiness-wave elastic kernel (``"elastic"`` capability; the
+    tile size becomes the slack window)."""
 
     name = "pallas"
 
+    def capabilities(self):
+        return ("elastic",)
+
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
-             interpret=None, mesh=None) -> PallasBoundSolve:
+             interpret=None, mesh=None, slack=0) -> BoundSolve:
         import jax
         import jax.numpy as jnp
 
@@ -94,10 +171,34 @@ class PallasBackend(Backend):
         del mesh  # single-chip kernel
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        assert exec_plan.val_src is not None and exec_plan.diag_src is not None
+        if slack > 0:
+            from repro.core.elastic import elastic_transform
+
+            ep = exec_plan.elastic
+            if ep is None or ep.slack != slack:
+                ep = elastic_transform(exec_plan, slack)
+            arrays = (
+                jnp.asarray(ep.wave_id.reshape(-1), jnp.int32),
+                jnp.asarray(ep.n_waves, jnp.int32),
+                *kernel_plan_arrays(exec_plan, steps_per_tile=slack,
+                                    dtype=dtype),
+            )
+            val_src = _pad_steps(exec_plan.val_src, slack, -1)
+            diag_src = _pad_steps(exec_plan.diag_src, slack, -1)
+            return ElasticPallasBoundSolve(
+                arrays,
+                ep,
+                jnp.asarray(val_src, jnp.int32),
+                jnp.asarray(diag_src, jnp.int32),
+                n=exec_plan.n,
+                n_entries=expected_entry_count(exec_plan),
+                np_dtype=np.dtype(dtype),
+                interpret=interpret,
+            )
         arrays = kernel_plan_arrays(
             exec_plan, steps_per_tile=steps_per_tile, dtype=dtype
         )
-        assert exec_plan.val_src is not None and exec_plan.diag_src is not None
         # source maps ride the same tile padding; -1 marks padding slots so
         # device-side refreshes leave them untouched
         val_src = _pad_steps(exec_plan.val_src, steps_per_tile, -1)

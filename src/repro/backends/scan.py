@@ -84,25 +84,115 @@ class ScanBoundSolve(BoundSolve):
         }
 
 
+class ElasticScanBoundSolve(BoundSolve):
+    """The ``mode="elastic"`` scan bound: ``ceil(T / slack)`` fused
+    macro-steps instead of T scan steps (``core.elastic``), bitwise-
+    identical to ``ScanBoundSolve`` on the same plan."""
+
+    backend = "scan"
+    # the macro-step tensors bake the slack window into the trace shape
+    # and the elastic bound has no banked/grouped twin — width-class
+    # grouping stays on the bulk-synchronous bound
+    supports_grouped = False
+
+    def __init__(self, ea, elastic, val_src, diag_src, np_dtype, n_entries):
+        self._ea = ea  # solver.executor.ElasticArrays (device-resident)
+        self._elastic = elastic  # core.elastic.ElasticPlan certificate
+        self._val_src = val_src  # int32[M, S, k, W] device (-1 padded)
+        self._diag_src = diag_src  # int32[M, S, k] device (-1 padded)
+        self._np_dtype = np_dtype
+        self.n = ea.n
+        self.n_entries = n_entries
+
+    def solve(self, b):
+        from repro.solver.executor import solve_with_elastic
+
+        return solve_with_elastic(self._ea, b)
+
+    def update_values(self, data: np.ndarray) -> "ElasticScanBoundSolve":
+        import jax.numpy as jnp
+
+        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
+        vals, diag = masked_value_gather(
+            data, self._val_src, self._ea.vals, self._diag_src, self._ea.diag
+        )
+        return ElasticScanBoundSolve(
+            self._ea._replace(vals=vals, diag=diag),
+            self._elastic,
+            self._val_src,  # index tensors shared, read-only
+            self._diag_src,
+            self._np_dtype,
+            self.n_entries,
+        )
+
+    def describe(self) -> dict:
+        M, S, k = self._ea.row_ids.shape
+        W = self._ea.col_idx.shape[-1]
+        return {
+            "backend": self.backend,
+            "mode": "elastic",
+            "n": self.n,
+            "n_steps": self._ea.n_steps,
+            "n_macro_steps": M,
+            "slack": S,
+            "k": k,
+            "W": W,
+            "dtype": np.dtype(self._np_dtype).name,
+            "device_bytes": int(
+                sum(a.size * a.dtype.itemsize
+                    for a in self._ea[:5] + (self._val_src, self._diag_src))
+            ),
+        }
+
+
 @register_backend
 class ScanBackend(Backend):
     """One `lax.scan` over the plan; superstep barriers are free on a
-    single chip, so `step_bounds` is ignored here."""
+    single chip, so `step_bounds` is ignored here. ``bind(slack=s)``
+    switches to the elastic macro-step executor (``"elastic"``
+    capability)."""
 
     name = "scan"
 
     def capabilities(self):
-        return ("grouped",)
+        return ("grouped", "elastic")
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
-             interpret=None, mesh=None) -> ScanBoundSolve:
+             interpret=None, mesh=None, slack=0) -> BoundSolve:
         import jax.numpy as jnp
 
         from repro.solver.executor import plan_arrays
 
         del steps_per_tile, interpret, mesh  # scan has no tiling or mesh
-        pa = plan_arrays(exec_plan, dtype=dtype)
         assert exec_plan.val_src is not None and exec_plan.diag_src is not None
+        if slack > 0:
+            from repro.core.elastic import elastic_transform
+            from repro.solver.executor import (
+                _pad_to_window,
+                elastic_plan_arrays,
+            )
+
+            ep = exec_plan.elastic
+            if ep is None or ep.slack != slack:
+                ep = elastic_transform(exec_plan, slack)
+            ea = elastic_plan_arrays(exec_plan, slack=slack, dtype=dtype)
+            M, S = ea.row_ids.shape[:2]
+            pad = M * S - exec_plan.n_steps
+            # source maps ride the same window padding; -1 marks padding
+            # so device-side refreshes leave those slots untouched
+            val_src = _pad_to_window(exec_plan.val_src, pad, -1)
+            diag_src = _pad_to_window(exec_plan.diag_src, pad, -1)
+            return ElasticScanBoundSolve(
+                ea,
+                ep,
+                jnp.asarray(val_src.reshape(M, S, *val_src.shape[1:]),
+                            jnp.int32),
+                jnp.asarray(diag_src.reshape(M, S, *diag_src.shape[1:]),
+                            jnp.int32),
+                np.dtype(dtype),
+                expected_entry_count(exec_plan),
+            )
+        pa = plan_arrays(exec_plan, dtype=dtype)
         return ScanBoundSolve(
             pa,
             jnp.asarray(exec_plan.val_src, jnp.int32),

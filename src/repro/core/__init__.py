@@ -24,6 +24,12 @@ from repro.core.coarsen import (
     pull_back_schedule,
     transitive_sparsify,
 )
+from repro.core.elastic import (
+    DEFAULT_SLACK,
+    ElasticPlan,
+    elastic_transform,
+    step_dependencies,
+)
 from repro.core.funnel import funnel_grow_local
 from repro.core.growlocal import grow_local
 from repro.core.hdagg import hdagg_schedule
@@ -31,11 +37,15 @@ from repro.core.plan import ExecPlan, compile_plan
 from repro.core.reorder import Reordering, apply_reordering, schedule_order
 from repro.core.schedule import (
     DEFAULT_L,
+    DEFAULT_L_STEP,
     Schedule,
     bsp_cost,
     check_validity,
+    elastic_cost,
     schedule_stats,
+    schedule_step_count,
     serial_schedule,
+    step_cost,
 )
 from repro.core.spmp_like import L_P2P_EFFECTIVE, spmp_like_schedule
 from repro.core.wavefront import wavefront_schedule
@@ -67,4 +77,12 @@ __all__ = [
     "split_ranges",
     "ExecPlan",
     "compile_plan",
+    "DEFAULT_SLACK",
+    "ElasticPlan",
+    "elastic_transform",
+    "step_dependencies",
+    "DEFAULT_L_STEP",
+    "schedule_step_count",
+    "step_cost",
+    "elastic_cost",
 ]

@@ -59,6 +59,11 @@ class ExecPlan:
     new matrix with the *same* sparsity pattern without recompiling — the
     plan-cache ``numeric_update`` path (and, device-side, the
     ``repro.backends`` ``BoundSolve.update_values`` gather).
+
+    ``elastic`` (optional) attaches the bounded-slack certificate from
+    ``core.elastic.elastic_transform`` when the plan was built for
+    ``mode="elastic"`` — the executors' macro-step/wave geometry;
+    ``stats()`` then reports barrier counts before/after fusion.
     """
 
     n: int
@@ -72,6 +77,7 @@ class ExecPlan:
     step_bounds: np.ndarray
     val_src: np.ndarray | None = None
     diag_src: np.ndarray | None = None
+    elastic: "object | None" = None  # core.elastic.ElasticPlan when elastic
 
     def numeric_update(self, data: np.ndarray) -> None:
         """Overwrite ``vals``/``diag`` in place from ``data`` — the ``.data``
@@ -103,7 +109,7 @@ class ExecPlan:
             real_nnz = int((self.val_src >= 0).sum())
         else:  # plans built without source maps fall back to the value test
             real_nnz = int((self.vals != 0).sum())
-        return {
+        out = {
             "n_steps": self.n_steps,
             "n_supersteps": self.n_supersteps,
             "k": self.k,
@@ -115,6 +121,13 @@ class ExecPlan:
                 + self.row_ids.size * 4 + self.diag.size * self.diag.itemsize
             ),
         }
+        if self.elastic is not None:
+            # barrier accounting before/after bounded-slack fusion: the
+            # bulk executors pay one scan/grid step per plan step and one
+            # barrier per superstep; elastic pays one macro-step per
+            # slack window and one barrier per fused superstep run
+            out["elastic"] = self.elastic.stats()
+        return out
 
 
 def _resolve_width(row_nnz_off: np.ndarray, n: int, width: int | None) -> int:

@@ -23,6 +23,14 @@ Per-row recurrence inside a tile (sequential over the tile's rows):
     x[row] = (b[row] - acc) / diag        (only on non-accum rows)
 The accumulator lives in a VMEM scratch buffer so it survives across grid
 steps (rows wider than W span tiles).
+
+``sptrsv_pallas_elastic`` is the ``mode="elastic"`` variant: instead of
+one ``fori_loop`` iteration per lock-step row (a level barrier inside
+the tile), it iterates the tile's *readiness waves* — runs of mutually
+independent steps certified by ``core.elastic.elastic_transform`` — with
+per-row readiness masks, so tiles whose rows are mostly independent
+finish in a handful of iterations. Bitwise-identical to the bulk kernel
+(the per-row accumulation order is untouched; see the kernel docstring).
 """
 from __future__ import annotations
 
@@ -127,6 +135,150 @@ def _sptrsv_mrhs_kernel(
     jax.lax.fori_loop(0, steps_per_tile, body, ())
 
 
+def _sptrsv_elastic_kernel(
+    wave_ref,  # int32[S]  readiness wave of each in-tile step
+    nw_ref,  # int32[1]  number of waves in this tile
+    row_ref,  # int32[S, k]
+    col_ref,  # int32[S, k, W]
+    val_ref,  # f[S, k, W]
+    diag_ref,  # f[S, k]
+    accum_ref,  # f[S, k]  (0/1 mask)
+    b_ref,  # f[n+1]  (resident)
+    x_in_ref,  # f[n+1]  (donated zero buffer, aliased with x_ref)
+    x_ref,  # f[n+1]  (aliased in/out, resident)
+    acc_ref,  # f[k] scratch — selected accumulator entering the tile
+    tot_ref,  # f[S, k] scratch — per-step running totals within the tile
+    *,
+    steps_per_tile: int,
+):
+    """Elastic tile body: per-row readiness waves instead of one
+    ``fori_loop`` iteration per lock-step row.
+
+    The elastic transform (core.elastic) certifies that within a tile,
+    consecutive steps sharing a ``wave_id`` are mutually independent —
+    their gather columns were all written before the wave starts and no
+    accumulator chain crosses into them. The loop therefore iterates
+    ``n_waves <= steps_per_tile`` times (the traced bound lowers to a
+    while loop), each iteration processing a whole wave of rows at once
+    under a readiness mask — on wide-wave tiles this replaces the level
+    barrier (one iteration per step) with far fewer iterations.
+
+    Bitwise equality with the bulk kernel: each step's partial sum is
+    still ``sum_w v * x[col]`` reduced in the same lane order, and the
+    accumulator entering step s is *selected*, never re-summed — step
+    s reads ``tot_ref[s-1]`` iff step s-1 accumulates (same-lane chain,
+    forced into an earlier wave), else the zero the bulk kernel would
+    also hold. Stale ``tot_ref`` rows are never selected: a same-wave
+    predecessor cannot carry ``accum`` by the wave-break rule.
+    """
+    del x_in_ref
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+    # tot_ref needs no init: rows are only read behind an accum flag,
+    # which certifies the row was written in an earlier wave of THIS tile
+
+    rows = row_ref[...]  # int32[S, k]
+    aflag = accum_ref[...] > 0.5  # bool[S, k]
+    waves = wave_ref[...]  # int32[S]
+    n_slot = x_ref.shape[0] - 1
+
+    def wave(r, _):
+        x = x_ref[...]
+        sel = waves == r  # bool[S]
+        cols = col_ref[...]
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        ps = jnp.sum(val_ref[...] * gathered, axis=-1)  # f[S, k]
+        tot_prev = tot_ref[...]
+        # accumulator entering step s: the tile carry for s = 0, else
+        # step s-1's total iff s-1 is an accum step (same-lane chain)
+        sel_acc = jnp.concatenate(
+            [acc_ref[...][None], jnp.where(aflag[:-1], tot_prev[:-1], 0.0)],
+            axis=0,
+        )
+        tot = sel_acc + ps
+        b_rows = jnp.take(b_ref[...], rows.reshape(-1), axis=0).reshape(rows.shape)
+        xv = (b_rows - tot) / diag_ref[...]
+        live = sel[:, None] & ~aflag  # rows finalized by this wave
+        safe = jnp.where(live, rows, n_slot)  # off-wave lanes hit scratch
+        x_ref[...] = x.at[safe.reshape(-1)].set(
+            jnp.where(live, xv, 0.0).reshape(-1)
+        )
+        tot_ref[...] = jnp.where(sel[:, None], tot, tot_prev)
+        return ()
+
+    jax.lax.fori_loop(0, nw_ref[0], wave, ())
+    # tile carry: the last step's total iff it accumulates into the next
+    # tile (virtual-row chains are same-lane consecutive steps)
+    acc_ref[...] = jnp.where(
+        aflag[steps_per_tile - 1], tot_ref[steps_per_tile - 1], 0.0
+    )
+
+
+def _sptrsv_elastic_mrhs_kernel(
+    wave_ref,  # int32[S]
+    nw_ref,  # int32[1]
+    row_ref,  # int32[S, k]
+    col_ref,  # int32[S, k, W]
+    val_ref,  # f[S, k, W]
+    diag_ref,  # f[S, k]
+    accum_ref,  # f[S, k]
+    b_ref,  # f[n+1, m]  (resident)
+    x_in_ref,  # f[n+1, m]
+    x_ref,  # f[n+1, m]  (aliased in/out, resident)
+    acc_ref,  # f[k, m] scratch
+    tot_ref,  # f[S, k, m] scratch
+    *,
+    steps_per_tile: int,
+):
+    """Multi-RHS twin of ``_sptrsv_elastic_kernel`` (x slots widen to m)."""
+    del x_in_ref
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = row_ref[...]
+    aflag = accum_ref[...] > 0.5
+    waves = wave_ref[...]
+    n_slot = x_ref.shape[0] - 1
+
+    def wave(r, _):
+        x = x_ref[...]  # f[n+1, m]
+        sel = waves == r
+        cols = col_ref[...]
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(*cols.shape, -1)
+        ps = jnp.sum(val_ref[...][..., None] * gathered, axis=2)  # f[S, k, m]
+        tot_prev = tot_ref[...]
+        sel_acc = jnp.concatenate(
+            [
+                acc_ref[...][None],
+                jnp.where(aflag[:-1, :, None], tot_prev[:-1], 0.0),
+            ],
+            axis=0,
+        )
+        tot = sel_acc + ps
+        b_rows = jnp.take(b_ref[...], rows.reshape(-1), axis=0).reshape(
+            *rows.shape, -1
+        )
+        xv = (b_rows - tot) / diag_ref[...][..., None]
+        live = sel[:, None] & ~aflag
+        safe = jnp.where(live, rows, n_slot)
+        x_ref[...] = x.at[safe.reshape(-1)].set(
+            jnp.where(live[..., None], xv, 0.0).reshape(-1, xv.shape[-1])
+        )
+        tot_ref[...] = jnp.where(sel[:, None, None], tot, tot_prev)
+        return ()
+
+    jax.lax.fori_loop(0, nw_ref[0], wave, ())
+    acc_ref[...] = jnp.where(
+        aflag[steps_per_tile - 1][:, None], tot_ref[steps_per_tile - 1], 0.0
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("steps_per_tile", "interpret"),
@@ -196,3 +348,82 @@ def sptrsv_pallas(
         interpret=interpret,
         compiler_params=compiler_params,
     )(row_ids, col_idx, vals, diag, accum_mask, b_pad, x0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps_per_tile", "interpret"),
+)
+def sptrsv_pallas_elastic(
+    wave_id,  # int32[T]  readiness wave of each step within its tile
+    n_waves,  # int32[n_tiles]  waves per tile
+    row_ids,  # int32[T, k]
+    col_idx,  # int32[T, k, W]
+    vals,  # f[T, k, W]
+    diag,  # f[T, k]
+    accum_mask,  # f[T, k] (0/1)
+    b_pad,  # f[n+1] or f[n+1, m]
+    *,
+    steps_per_tile: int = 8,
+    interpret: bool = False,
+):
+    """Elastic scheduled solve: per-row readiness waves replace the level
+    barrier inside each tile (see ``_sptrsv_elastic_kernel``). The tile
+    size must equal the elastic transform's slack window — ``wave_id`` /
+    ``n_waves`` come from ``core.elastic.elastic_transform(plan, slack)``
+    with ``slack == steps_per_tile``. Returns x shaped like ``b_pad``."""
+    T, k = row_ids.shape
+    W = col_idx.shape[-1]
+    assert T % steps_per_tile == 0, "pad T to a multiple of steps_per_tile"
+    n_tiles = T // steps_per_tile
+    multi_rhs = b_pad.ndim == 2
+    x0 = jnp.zeros_like(b_pad)
+
+    grid = (n_tiles,)
+    tile = lambda *tail: pl.BlockSpec(  # noqa: E731
+        (steps_per_tile, *tail), lambda i: (i, *([0] * len(tail)))
+    )
+    resident = pl.BlockSpec(b_pad.shape, lambda i: (0,) * b_pad.ndim)
+
+    if multi_rhs:
+        kernel = functools.partial(
+            _sptrsv_elastic_mrhs_kernel, steps_per_tile=steps_per_tile
+        )
+        acc_shape = (k, b_pad.shape[1])
+        tot_shape = (steps_per_tile, k, b_pad.shape[1])
+    else:
+        kernel = functools.partial(
+            _sptrsv_elastic_kernel, steps_per_tile=steps_per_tile
+        )
+        acc_shape = (k,)
+        tot_shape = (steps_per_tile, k)
+    assert _VMEM is not None, "pltpu namespace unavailable"
+    scratch_shapes = [_VMEM(acc_shape, vals.dtype), _VMEM(tot_shape, vals.dtype)]
+
+    compiler_params = None
+    if not interpret:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),  # sequential grid = chain
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((steps_per_tile,), lambda i: (i,)),  # wave_id
+            pl.BlockSpec((1,), lambda i: (i,)),  # n_waves
+            tile(k),  # row_ids
+            tile(k, W),  # col_idx
+            tile(k, W),  # vals
+            tile(k),  # diag
+            tile(k),  # accum mask
+            resident,  # b
+            resident,  # x0 (aliased with the output)
+        ],
+        out_specs=resident,  # x
+        out_shape=jax.ShapeDtypeStruct(b_pad.shape, vals.dtype),
+        input_output_aliases={8: 0},  # x0 (9th arg) <-> output
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(wave_id, n_waves, row_ids, col_idx, vals, diag, accum_mask, b_pad, x0)

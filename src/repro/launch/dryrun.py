@@ -330,7 +330,13 @@ def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
         L = erdos_renyi_lower(spec["n"], spec["p"], seed=1)
     else:
         L = narrow_band_lower(spec["n"], spec["p"], spec["band"], seed=1)
-    solver = TriangularSolver.plan(L, strategy="growlocal", k=k)
+    # plan through the real distributed backend so the reported numbers
+    # come from the binding that production would execute —
+    # BoundSolve.describe() (device bytes, padded plan geometry, mesh)
+    # rather than ad-hoc locals recomputed here
+    solver = TriangularSolver.plan(
+        L, strategy="growlocal", k=k, backend="distributed", mesh=mesh
+    )
     dspec = dist_plan_spec(solver.exec_plan, batch=spec["batch"])
     try:
         with mesh:
@@ -345,13 +351,15 @@ def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
     hlo = compiled.as_text()
     terms = roofline_terms(compiled, hlo, chips)
     mem_d = _memory_dict(compiled)
+    info = solver.info()
     result = {
         "cell": tag, "status": "OK", "mesh": dict(mesh.shape), "chips": chips,
         "compile_s": round(time.time() - t0, 1),
         "roofline": terms,
         "memory_analysis": mem_d,
-        "supersteps": s2.n_supersteps,
-        "plan": plan.stats(),
+        "supersteps": solver.n_supersteps,
+        "plan": info["plan"],
+        "binding": info["binding"],
         "nnz": L.nnz,
         # useful flops: 2 per off-diagonal nnz + 1 divide per row
         "model_flops": float(2 * (L.nnz - L.n_rows) + L.n_rows) * spec["batch"],

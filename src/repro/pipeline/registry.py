@@ -47,6 +47,10 @@ class ScheduleOptions:
     sparsify: bool = True  # transitive sparsification pre-pass
     reorder: bool = True  # §5 locality reordering (consumed by the solver)
     n_blocks: int = 4  # diagonal blocks for the "block" strategy (§3.1)
+    # elastic staleness window (consumed by the solver's backend binding,
+    # not the schedulers): 0 = bulk-synchronous, s > 0 fuses runs of s
+    # plan steps into one macro-step (core.elastic; mode="elastic")
+    slack: int = 0
 
     def replace(self, **kw) -> "ScheduleOptions":
         return dataclasses.replace(self, **kw)

@@ -62,12 +62,15 @@ def mesh_fingerprint(mesh) -> tuple | None:
 
 
 def binding_fingerprint(
-    *, backend, dtype, width, steps_per_tile, interpret, mesh
+    *, backend, dtype, width, steps_per_tile, interpret, mesh, slack=0
 ) -> tuple:
     """The backend-binding part of a plan's identity — everything beyond
     (pattern, strategy, options, orientation) that changes the compiled
     solver. One helper shared by ``plan()``'s cache key and the
-    autotuner's tune-memo key so the two can never drift apart."""
+    autotuner's tune-memo key so the two can never drift apart.
+    ``slack > 0`` marks an elastic (macro-step) binding — a different
+    compiled graph from the bulk-synchronous one, so it must key (and
+    split width classes) even though the plan tensors match."""
     return (
         backend,
         np.dtype(dtype).str,
@@ -75,6 +78,7 @@ def binding_fingerprint(
         steps_per_tile,
         interpret,
         mesh_fingerprint(mesh),
+        slack,
     )
 
 
@@ -100,17 +104,18 @@ def mirror_to_lower(a: CSRMatrix, lower: bool):
 def _entry_permutation(m: CSRMatrix, perm: np.ndarray) -> np.ndarray:
     """``e`` such that ``permute_symmetric(m, perm).data == m.data[e]``.
 
-    Rides the entry *ids* through the same permutation as the values (ids
-    stay exact in float64 up to 2^53 entries; patterns here are << that).
+    Pure scatter/argsort passes — two relabel gathers and one ``lexsort``
+    — instead of riding entry ids through ``permute_symmetric`` on a
+    float64 carrier matrix (the old inspector hot spot: it re-ran the
+    full ``csr_from_coo`` duplicate-merge machinery per plan). The
+    ``lexsort`` key order (cols minor, rows major) matches
+    ``csr_from_coo`` exactly and the (row, col) pairs of a CSR pattern
+    are unique, so the result is identical entry-for-entry.
     """
-    carrier = CSRMatrix(
-        n_rows=m.n_rows,
-        n_cols=m.n_cols,
-        indptr=m.indptr,
-        indices=m.indices,
-        data=np.arange(m.nnz, dtype=np.float64),
-    )
-    return permute_symmetric(carrier, perm).data.astype(np.int64)
+    perm = np.asarray(perm, dtype=np.int64)
+    inv = np.empty(m.n_rows, dtype=np.int64)
+    inv[perm] = np.arange(m.n_rows, dtype=np.int64)
+    return np.lexsort((inv[m.indices], inv[m.row_of_entry()]))
 
 
 class TriangularSolver:
@@ -131,6 +136,7 @@ class TriangularSolver:
         mesh=None,
         steps_per_tile: int = 8,
         interpret: Optional[bool] = None,
+        slack: int = 0,
     ):
         self.exec_plan = exec_plan
         self.backend = backend
@@ -142,6 +148,7 @@ class TriangularSolver:
         self._mesh = mesh
         self._steps_per_tile = steps_per_tile
         self._interpret = interpret
+        self._slack = slack  # > 0: elastic (macro-step) execution mode
         self._source_data: Optional[np.ndarray] = None  # set by plan()
         self._selection = None  # autotune Selection, set by plan(auto)
         self.plan_key = None  # concrete plan-cache key, set by plan()
@@ -165,6 +172,7 @@ class TriangularSolver:
             steps_per_tile=self._steps_per_tile,
             interpret=self._interpret,
             mesh=self._mesh,
+            slack=self._slack,
         )
 
     @property
@@ -197,6 +205,7 @@ class TriangularSolver:
             steps_per_tile=self._steps_per_tile,
             interpret=self._interpret,
             mesh=self._mesh,
+            slack=self._slack,
         )
 
     @property
@@ -295,6 +304,8 @@ class TriangularSolver:
         out = {
             "strategy": self.strategy,
             "backend": self.backend,
+            "mode": "elastic" if self._slack else "bsp",
+            "slack": self._slack,
             "lower": self.lower,
             "n_supersteps": self.n_supersteps,
             "inspector_seconds": self.inspector_seconds,
@@ -335,6 +346,7 @@ class TriangularSolver:
         interpret: Optional[bool] = None,
         sched=None,
         tune: bool = False,
+        mode: Optional[str] = None,
         **opts,
     ) -> "TriangularSolver":
         """Plan a solver for triangular ``a`` (lower, or upper with
@@ -345,13 +357,24 @@ class TriangularSolver:
         pre-built Schedule (never cached — the cache cannot key on
         arbitrary schedules).
 
+        ``mode`` selects the execution mode: ``"bsp"`` (bulk-synchronous,
+        the default) or ``"elastic"`` — bounded-slack macro-step execution
+        (``core.elastic``; bitwise-identical results, fewer scan/grid
+        steps on deep DAGs). ``mode="elastic"`` uses the staleness window
+        from ``slack=...`` (a ``ScheduleOptions`` knob) or the calibrated
+        ``core.DEFAULT_SLACK``; passing ``slack > 0`` alone also enables
+        elastic. The backend must advertise the ``"elastic"`` capability.
+
         ``strategy="auto"`` lets the autotuner choose: DAG features ->
         rule-based shortlist -> §2.2 cost model (``repro.autotune``); with
         ``tune=True`` the shortlisted plans are additionally compiled and
-        *timed* on the real backend. The resolved config is memoized per
-        sparsity fingerprint (inside ``cache`` when given), and the plan is
-        cached under the resolved *concrete* key — so repeated auto plans
-        on one pattern skip both selection and scheduling."""
+        *timed* on the real backend. When the backend supports elastic
+        (and ``mode`` does not force ``"bsp"``), the selector may also
+        turn elastic mode on via its step-granular cost rule. The
+        resolved config is memoized per sparsity fingerprint (inside
+        ``cache`` when given), and the plan is cached under the resolved
+        *concrete* key — so repeated auto plans on one pattern skip both
+        selection and scheduling."""
         # normalize once: the registry is case-insensitive, and the raw
         # string enters the plan-cache key ("GrowLocal" vs "growlocal"
         # must not schedule twice); also makes strategy="Auto" work
@@ -360,7 +383,7 @@ class TriangularSolver:
         # with the registry (not a hard-coded tuple) naming the options
         from repro.backends import get_backend
 
-        get_backend(backend)
+        backend_caps = get_backend(backend).capabilities()
         if tune and (strategy != "auto" or sched is not None):
             raise ValueError(
                 "tune=True runs measured trials to refine an auto "
@@ -372,6 +395,26 @@ class TriangularSolver:
             o = o.replace(k=k)
         if opts:
             o = o.replace(**opts)
+        if mode is not None and mode not in ("bsp", "elastic"):
+            raise ValueError(
+                f"mode must be 'bsp' or 'elastic'; got {mode!r}"
+            )
+        if mode == "elastic" and o.slack == 0:
+            from repro.core import DEFAULT_SLACK
+
+            o = o.replace(slack=DEFAULT_SLACK)
+        if mode == "bsp" and o.slack > 0:
+            raise ValueError(
+                f"mode='bsp' conflicts with slack={o.slack}; drop one"
+            )
+        if o.slack > 0 and "elastic" not in backend_caps:
+            raise ValueError(
+                f"backend {backend!r} does not support mode='elastic' "
+                f"(requested slack={o.slack}, no 'elastic' capability)"
+            )
+        # the selector may only turn elastic ON when the binding can run
+        # it and the caller did not force bulk-synchronous
+        elastic_ok = mode != "bsp" and "elastic" in backend_caps
 
         fp = pattern_fingerprint(a)
         selection = None
@@ -387,6 +430,7 @@ class TriangularSolver:
                 tune=tune,
                 cache=cache,
                 fp=fp,
+                allow_elastic=elastic_ok,
                 plan_kwargs=dict(
                     backend=backend, dtype=dtype, width=width,
                     mesh=mesh, steps_per_tile=steps_per_tile,
@@ -394,12 +438,14 @@ class TriangularSolver:
                 ),
             )
             strategy, o = selection.strategy, selection.options
-        # o (a frozen dataclass) covers every scheduling knob incl. k and
-        # reorder; binding params (mesh identity, tile size, interpret) also
-        # change the built solver and must key too.
+        # o (a frozen dataclass) covers every scheduling knob incl. k,
+        # reorder and the elastic slack; binding params (mesh identity,
+        # tile size, interpret, slack again) also change the built solver
+        # and must key too.
         key = (fp, strategy, o, lower) + binding_fingerprint(
             backend=backend, dtype=dtype, width=width,
             steps_per_tile=steps_per_tile, interpret=interpret, mesh=mesh,
+            slack=o.slack,
         )
 
         def build() -> "TriangularSolver":
@@ -421,6 +467,12 @@ class TriangularSolver:
                 m2, s2, inner = m0, s, np.arange(n, dtype=np.int64)
 
             plan = compile_plan(m2, s2, width=width, dtype=np.dtype(dtype))
+            if o.slack > 0:
+                # attach the slack certificate so the backend bind (and
+                # ExecPlan.stats barrier accounting) reuse one transform
+                from repro.core import elastic_transform
+
+                plan.elastic = elastic_transform(plan, o.slack)
 
             # rebase the plan's value-source maps onto a's entry order so
             # numeric_update() consumes a.data directly
@@ -445,6 +497,7 @@ class TriangularSolver:
                 mesh=mesh,
                 steps_per_tile=steps_per_tile,
                 interpret=interpret,
+                slack=o.slack,
             )
             solver._source_data = np.array(a.data)
             # selection is recorded at build time only — cached solvers are

@@ -14,6 +14,14 @@ executor and the Pallas kernel grid.
 Padding protocol (see core.plan): row id n = scratch row, gather index n =
 scratch slot, so padded lanes are harmless. `accum` rows carry partial sums
 for rows wider than W.
+
+The elastic section at the bottom (``ElasticArrays`` /
+``solve_with_elastic``) is the ``mode="elastic"`` variant: the same step
+bodies, but scanned over ``ceil(T/slack)`` fused macro-steps with the
+slack window unrolled inside each one (certificate in ``core.elastic``;
+bound via ``get_backend("scan").bind(plan, slack=s)``). Results are
+bitwise-identical to the bulk scan — the unrolled bodies replay the
+exact same op sequence.
 """
 from __future__ import annotations
 
@@ -51,24 +59,33 @@ def plan_arrays(plan: ExecPlan, dtype=jnp.float32) -> PlanArrays:
     )
 
 
+def _step_single(x, acc, rows, cols, v, d, a, b_pad):
+    """One plan step: gather, fused multiply-accumulate, divide, scatter.
+
+    Shared verbatim by the bulk-synchronous scan and the elastic
+    macro-step executor so both paths emit the exact same op sequence
+    per step — the foundation of the bitwise elastic == bulk guarantee
+    (tests/test_elastic.py).
+    """
+    partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
+    acc = acc + partial_sum
+    xv = (b_pad[rows] - acc) / d
+    # finishing lanes write x and reset their accumulator
+    write = jnp.where(a, x[rows], xv)
+    # NOTE: padded lanes share the scratch row id n -> indices are not
+    # unique; plain scatter keeps them well-defined (they all write junk
+    # to the scratch slot).
+    x = x.at[rows].set(write)
+    acc = jnp.where(a, acc, 0.0)
+    return x, acc
+
+
 def _scan_single(row_ids, col_idx, vals, diag, accum, b_pad, n):
     x0 = jnp.zeros(n + 1, dtype=b_pad.dtype)
     acc0 = jnp.zeros(row_ids.shape[1], dtype=b_pad.dtype)
 
     def step(carry, inp):
-        x, acc = carry
-        rows, cols, v, d, a = inp
-        partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
-        acc = acc + partial_sum
-        xv = (b_pad[rows] - acc) / d
-        # finishing lanes write x and reset their accumulator
-        write = jnp.where(a, x[rows], xv)
-        # NOTE: padded lanes share the scratch row id n -> indices are not
-        # unique; plain scatter keeps them well-defined (they all write junk
-        # to the scratch slot).
-        x = x.at[rows].set(write)
-        acc = jnp.where(a, acc, 0.0)
-        return (x, acc), None
+        return _step_single(*carry, *inp, b_pad), None
 
     (x, _), _ = jax.lax.scan(
         step, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
@@ -185,6 +202,17 @@ def solve_with_bank(bank: BankTensors, lane_idx, B) -> jax.Array:
     )
 
 
+def _step_mrhs(x, acc, rows, cols, v, d, a, b_pad):
+    """Multi-RHS twin of ``_step_single`` (value lanes widen to m);
+    shared by the bulk scan and the elastic macro-step body."""
+    acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
+    xv = (b_pad[rows] - acc) / d[:, None]
+    write = jnp.where(a[:, None], x[rows], xv)
+    x = x.at[rows].set(write)
+    acc = jnp.where(a[:, None], acc, 0.0)
+    return x, acc
+
+
 @partial(jax.jit, static_argnames=("n",))
 def _solve_scan_mrhs(row_ids, col_idx, vals, diag, accum, b_pad, n):
     """Batched SpTRSM: ``b_pad`` f[n+1, m], carry ``x`` f[n+1, m]. One plan
@@ -195,14 +223,7 @@ def _solve_scan_mrhs(row_ids, col_idx, vals, diag, accum, b_pad, n):
     acc0 = jnp.zeros((row_ids.shape[1], m), dtype=b_pad.dtype)
 
     def step(carry, inp):
-        x, acc = carry
-        rows, cols, v, d, a = inp
-        acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
-        xv = (b_pad[rows] - acc) / d[:, None]
-        write = jnp.where(a[:, None], x[rows], xv)
-        x = x.at[rows].set(write)
-        acc = jnp.where(a[:, None], acc, 0.0)
-        return (x, acc), None
+        return _step_mrhs(*carry, *inp, b_pad), None
 
     (x, _), _ = jax.lax.scan(
         step, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
@@ -218,6 +239,129 @@ def solve_with_plan(pa: PlanArrays, b: jax.Array) -> jax.Array:
     b_pad = jnp.concatenate([b, pad])
     solver = _solve_scan if b.ndim == 1 else _solve_scan_mrhs
     return solver(pa.row_ids, pa.col_idx, pa.vals, pa.diag, pa.accum, b_pad, pa.n)
+
+
+# --------------------------------------------------------------- elastic
+class ElasticArrays(NamedTuple):
+    """Device-resident plan tensors in macro-step layout: the T plan
+    steps, padded up to ``M * slack`` with scratch steps, reshaped to a
+    leading [M, slack] grid. ``lax.scan`` runs over the M macro-steps;
+    the slack axis is unrolled inside the step body (see
+    ``_elastic_single``)."""
+
+    row_ids: jax.Array  # int32[M, S, k]
+    col_idx: jax.Array  # int32[M, S, k, W]
+    vals: jax.Array  # f[M, S, k, W]
+    diag: jax.Array  # f[M, S, k]
+    accum: jax.Array  # bool[M, S, k]
+    n: int
+    slack: int
+    n_steps: int  # original (pre-padding) plan step count T
+
+
+def _pad_to_window(a: np.ndarray, pad: int, fill) -> np.ndarray:
+    if pad == 0:
+        return a
+    tail = np.full((pad, *a.shape[1:]), fill, dtype=a.dtype)
+    return np.concatenate([a, tail], axis=0)
+
+
+def elastic_plan_arrays(
+    plan: ExecPlan, *, slack: int, dtype=jnp.float32
+) -> ElasticArrays:
+    """Lay the plan out for the elastic executor. Padding steps are the
+    usual scratch protocol (row n, gather n, val 0, diag 1, no accum):
+    they cost a few junk scratch writes inside the last macro-step and
+    cannot perturb x[:n]. The accumulator provably enters the padding
+    region as zero — a plan's last real step never carries ``accum``
+    (every virtual-row chain ends with its finishing row)."""
+    T = plan.n_steps
+    M = max(1, -(-T // slack))
+    pad = M * slack - T
+    n, k, W = plan.n, plan.k, plan.W
+    return ElasticArrays(
+        row_ids=jnp.asarray(
+            _pad_to_window(plan.row_ids, pad, n).reshape(M, slack, k),
+            dtype=jnp.int32,
+        ),
+        col_idx=jnp.asarray(
+            _pad_to_window(plan.col_idx, pad, n).reshape(M, slack, k, W),
+            dtype=jnp.int32,
+        ),
+        vals=jnp.asarray(
+            _pad_to_window(plan.vals, pad, 0).reshape(M, slack, k, W),
+            dtype=dtype,
+        ),
+        diag=jnp.asarray(
+            _pad_to_window(plan.diag, pad, 1).reshape(M, slack, k),
+            dtype=dtype,
+        ),
+        accum=jnp.asarray(
+            _pad_to_window(plan.accum, pad, False).reshape(M, slack, k)
+        ),
+        n=n,
+        slack=int(slack),
+        n_steps=T,
+    )
+
+
+def _elastic_single(row_ids, col_idx, vals, diag, accum, b_pad, n):
+    """Elastic scan: ``ceil(T / slack)`` fused macro-steps. Each scan
+    step replays its window's ``slack`` plan steps in order through the
+    statically-unrolled ``_step_single`` body — intra-window
+    dependencies resolve by local substitution on the live x carry, so
+    every row still accumulates in exactly the plan order and the result
+    is bitwise-identical to ``_scan_single``; only the scan trip count
+    (and with it per-step dispatch overhead) shrinks."""
+    S = row_ids.shape[1]
+    x0 = jnp.zeros(n + 1, dtype=b_pad.dtype)
+    acc0 = jnp.zeros(row_ids.shape[2], dtype=b_pad.dtype)
+
+    def macro(carry, inp):
+        x, acc = carry
+        rows, cols, v, d, a = inp
+        for j in range(S):
+            x, acc = _step_single(x, acc, rows[j], cols[j], v[j], d[j], a[j], b_pad)
+        return (x, acc), None
+
+    (x, _), _ = jax.lax.scan(
+        macro, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
+    )
+    return x[:n]
+
+
+_solve_elastic = partial(jax.jit, static_argnames=("n",))(_elastic_single)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _solve_elastic_mrhs(row_ids, col_idx, vals, diag, accum, b_pad, n):
+    """Multi-RHS elastic scan (macro-step twin of ``_solve_scan_mrhs``)."""
+    S = row_ids.shape[1]
+    m = b_pad.shape[1]
+    x0 = jnp.zeros((n + 1, m), dtype=b_pad.dtype)
+    acc0 = jnp.zeros((row_ids.shape[2], m), dtype=b_pad.dtype)
+
+    def macro(carry, inp):
+        x, acc = carry
+        rows, cols, v, d, a = inp
+        for j in range(S):
+            x, acc = _step_mrhs(x, acc, rows[j], cols[j], v[j], d[j], a[j], b_pad)
+        return (x, acc), None
+
+    (x, _), _ = jax.lax.scan(
+        macro, (x0, acc0), (row_ids, col_idx, vals, diag, accum)
+    )
+    return x[:n]
+
+
+def solve_with_elastic(ea: ElasticArrays, b: jax.Array) -> jax.Array:
+    """Solve L x = b through the elastic macro-step scan. ``b``: f[n] or
+    f[n, m]; bitwise-identical to ``solve_with_plan`` on the same plan."""
+    b = b.astype(ea.vals.dtype)
+    pad = jnp.zeros((1, *b.shape[1:]), ea.vals.dtype)
+    b_pad = jnp.concatenate([b, pad])
+    solver = _solve_elastic if b.ndim == 1 else _solve_elastic_mrhs
+    return solver(ea.row_ids, ea.col_idx, ea.vals, ea.diag, ea.accum, b_pad, ea.n)
 
 
 def make_solver(plan: ExecPlan, dtype=jnp.float32):

@@ -339,3 +339,54 @@ def test_tune_mode_on_pallas_backend():
     )
     assert scan_solver.backend == "scan"
     assert cache.stats.selections >= 2
+
+
+@pytest.mark.slow
+def test_tune_mode_on_distributed_backend_subprocess():
+    """tune=True measured trials through the distributed backend: the
+    shortlist compiles and times on a real (forced-host) device mesh in
+    a subprocess, the tuned winner is mesh-bound and correct, and — the
+    distributed backend having no "elastic" capability — the selector
+    never turns elastic slack on for its trials, even on a banded
+    pattern that WOULD go elastic on scan."""
+    from _mesh import run_in_mesh_subprocess
+
+    run_in_mesh_subprocess("""
+        import numpy as np, jax
+        from repro.autotune import clear_selection_memo
+        from repro.pipeline import PlanCache, TriangularSolver
+        from repro.solver import solve_lower_scipy
+        from repro.sparse import narrow_band_lower
+
+        clear_selection_memo()
+        m = narrow_band_lower(400, 0.14, 10, seed=77)  # "banded" regime
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cache = PlanCache()
+        solver = TriangularSolver.plan(
+            m, strategy="auto", tune=True, cache=cache, k=4,
+            backend="distributed", mesh=mesh,
+        )
+        sel = solver.selection
+        assert sel.tuned and sel.timings is not None
+        assert {t[0] for t in sel.timings} == {
+            c.strategy for c in sel.candidates}
+        assert all(t[1] > 0 for t in sel.timings)
+        assert solver.backend == "distributed"
+        # no elastic leak into a backend that cannot run it
+        assert sel.options.slack == 0
+        assert all(c.options.slack == 0 for c in sel.candidates)
+        assert solver.info()["mode"] == "bsp"
+        # the tuned winner is cached under its mesh binding: pure hit
+        hits0 = cache.stats.hits
+        again = TriangularSolver.plan(
+            m, strategy="auto", tune=True, cache=cache, k=4,
+            backend="distributed", mesh=mesh,
+        )
+        assert cache.stats.hits > hits0
+        assert again.backend == "distributed"
+        b = np.random.default_rng(3).standard_normal(m.n_rows)
+        x = np.asarray(solver.solve(b))
+        ref = solve_lower_scipy(m, b)
+        assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3
+        print("dist-tune-ok")
+    """)
