@@ -143,6 +143,53 @@ class BoundSolve(abc.ABC):
             "grouped solves (no bank support)"
         )
 
+    # resident RHS slots — the continuous-batching serve contract
+    # (capability ``"slots"``). Four classmethods on top of the bank
+    # contract: a device-resident rhs bank f[n, S] that admission writes
+    # into slot-by-slot (``insert_lane``), the always-running dispatch
+    # loop solves at the fixed width S (``solve_resident`` — bitwise-
+    # identical to ``solve_bank`` on the same lanes), and completion
+    # reads out of (``extract_lane``). All three device ops move bits
+    # unchanged and must not perturb neighbor slots.
+    @classmethod
+    def blank_rhs(cls, n, slots, dtype):
+        """A zeroed device-resident rhs bank f[n, slots]."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support resident RHS "
+            "slots (no 'slots' capability)"
+        )
+
+    @classmethod
+    def insert_lane(cls, B_res, lane, b):
+        """A NEW resident bank with column ``lane`` replaced by ``b``
+        f[n]; every other column's bits are untouched and the input
+        bank is not mutated (in-flight passes keep their snapshot)."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support resident RHS "
+            "slots (no 'slots' capability)"
+        )
+
+    @classmethod
+    def extract_lane(cls, X, lane):
+        """Column ``lane`` of a pass result ``X`` f[n, S] as f[n],
+        bits unchanged."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support resident RHS "
+            "slots (no 'slots' capability)"
+        )
+
+    @classmethod
+    def solve_resident(cls, bank, lane_idx, B_res):
+        """One continuous-mode dispatch pass: solves the first
+        ``len(lane_idx)`` columns of the resident bank (the engine's
+        pow2 occupied-lane prefix — lightly-loaded banks never pay the
+        full-S solve), bitwise-identical to ``solve_bank`` on that
+        prefix; ``B_res`` is already on device, so nothing re-uploads."""
+        raise NotImplementedError(
+            f"backend {cls.backend!r} does not support resident RHS "
+            "slots (no 'slots' capability)"
+        )
+
     def _check_data(self, data: np.ndarray) -> np.ndarray:
         """Reject mis-sized update data. The device gather clamps
         out-of-range indices (same hazard solve() guards against for b),
@@ -208,5 +255,9 @@ class Backend(abc.ABC):
         (``BoundSolve.solve_grouped``; the serve layer's cross-pattern
         microbatching keys on it); ``"elastic"`` — ``bind(slack=s)``
         executes the bounded-slack macro-step mode (``core.elastic``),
-        bitwise-identical to the bulk-synchronous bound."""
+        bitwise-identical to the bulk-synchronous bound; ``"slots"`` —
+        persistent device-resident RHS slots on the stacked bank
+        (``blank_rhs``/``insert_lane``/``extract_lane``/
+        ``solve_resident``; the continuous-batching serve engine,
+        ``repro.serve.slots``, requires it)."""
         return ()

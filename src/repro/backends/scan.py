@@ -51,6 +51,33 @@ class ScanBoundSolve(BoundSolve):
 
         return solve_with_bank(bank, lane_idx, B)
 
+    # resident RHS slots ("slots" capability) — the continuous-batching
+    # serve engine's device contract, all thin wrappers over the jitted
+    # executor ops (one compiled variant per (n, S) shape)
+    @classmethod
+    def blank_rhs(cls, n, slots, dtype):
+        from repro.solver.executor import blank_rhs
+
+        return blank_rhs(n, slots, dtype)
+
+    @classmethod
+    def insert_lane(cls, B_res, lane, b):
+        from repro.solver.executor import insert_lane
+
+        return insert_lane(B_res, lane, b)
+
+    @classmethod
+    def extract_lane(cls, X, lane):
+        from repro.solver.executor import extract_lane
+
+        return extract_lane(X, lane)
+
+    @classmethod
+    def solve_resident(cls, bank, lane_idx, B_res):
+        from repro.solver.executor import solve_resident
+
+        return solve_resident(bank, lane_idx, B_res)
+
     def update_values(self, data: np.ndarray) -> "ScanBoundSolve":
         import jax.numpy as jnp
 
@@ -155,7 +182,7 @@ class ScanBackend(Backend):
     name = "scan"
 
     def capabilities(self):
-        return ("grouped", "elastic")
+        return ("grouped", "elastic", "slots")
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
              interpret=None, mesh=None, slack=0) -> BoundSolve:

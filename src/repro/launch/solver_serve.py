@@ -13,6 +13,8 @@ optionally dumps the full report as JSON (same shape as
       --mix width --width-class --strategy wavefront
   PYTHONPATH=src python -m repro.launch.solver_serve \\
       --mix hot --open-loop 400 --n-requests 800 --json report.json
+  PYTHONPATH=src python -m repro.launch.solver_serve \\
+      --mix hot --mode continuous --slots 32 --open-loop 150
 
 Mesh-sharded serving (the distributed backend needs >1 device; on a CPU
 host force a device count before jax initializes):
@@ -81,6 +83,17 @@ def main(argv=None) -> None:
         help="coalesce structurally-identical patterns into grouped "
         "multi-RHS solves (cross-pattern batching)",
     )
+    ap.add_argument(
+        "--mode", choices=("microbatch", "continuous"),
+        default="microbatch",
+        help="continuous: persistent resident-slot serving, no batch "
+        "formation deadline and no drain barrier (repro.serve.slots)",
+    )
+    ap.add_argument(
+        "--slots", type=int, default=None,
+        help="resident device lanes per width class in continuous mode "
+        "(default: max_batch, rounded up to a power of two)",
+    )
     ap.add_argument("--strategy", default="auto")
     ap.add_argument(
         "--backend", choices=("scan", "pallas", "distributed"),
@@ -93,6 +106,12 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--adversarial-patterns", type=int, default=16,
         help="distinct patterns for --mix adversarial",
+    )
+    ap.add_argument(
+        "--prewarm", action="store_true",
+        help="compile every dispatch variant before offering load "
+        "(recommended with --mode continuous: resident-slot serving "
+        "compiles one pass per pow2 prefix width)",
     )
     ap.add_argument(
         "--validate", action="store_true",
@@ -116,6 +135,8 @@ def main(argv=None) -> None:
         max_wait_us=args.max_wait_us,
         n_workers=args.workers,
         width_class_batching=args.width_class,
+        mode=args.mode,
+        n_slots=args.slots,
         strategy=args.strategy,
         backend=args.backend,
         **plan_kw,
@@ -127,10 +148,14 @@ def main(argv=None) -> None:
         print(
             f"registered {len(patterns)} patterns "
             f"(mix={args.mix}, backend={args.backend}, "
-            f"strategy={args.strategy}, workers={svc.n_workers}, "
+            f"strategy={args.strategy}, mode={svc.mode}, "
+            f"workers={svc.n_workers}, "
             f"width_class_batching={svc.width_class_batching})",
             flush=True,
         )
+        if args.prewarm:
+            svc.prewarm()
+            svc.metrics.reset()  # steady-state telemetry only
         if args.open_loop is not None:
             report = run_open_loop(
                 svc,

@@ -671,6 +671,21 @@ class GroupBank:
             )
         return cls.solve_bank(bank, lane_idx, B)
 
+    def solve_resident(self, keys, B_res) -> jnp.ndarray:
+        """One continuous-mode dispatch pass: solve column j of the
+        *device-resident* ``B_res`` f[n, S] against the member under
+        ``keys[j]`` — bitwise-identical to :meth:`solve` on the same
+        keys (``BoundSolve.solve_resident`` delegates to the same banked
+        kernel), but ``B_res`` never re-uploads: the continuous serve
+        engine (``repro.serve.slots``) mutates it slot-by-slot with
+        ``insert_lane`` and keeps it on device across passes."""
+        with self._lock:
+            cls, bank, index = self._ensure_locked()
+            lane_idx = np.fromiter(
+                (index[k] for k in keys), np.int32, count=len(keys)
+            )
+        return cls.solve_resident(bank, lane_idx, B_res)
+
     def describe(self) -> dict:
         with self._lock:
             return {

@@ -22,15 +22,28 @@ routes concurrently.
         svc.numeric_update(fp, new_vals)  # live refactorization
         svc.print_stats()
 
+``mode="continuous"`` swaps microbatch formation for persistent
+device-resident RHS slots (``repro.serve.slots``): admission allocates a
+free lane, an always-running dispatch loop solves the resident bank
+back-to-back, and there is no drain barrier between dispatches — the
+open-loop tail-latency regime.
+
 Module map:
 
   * ``service`` — ``SolveService`` / ``SolveTicket`` (admission, workers)
   * ``batcher`` — pattern-routed microbatching queue (``MicroBatcher``)
+    + the continuous engine's ``AdmissionQueue``
+  * ``slots``   — continuous batching: ``SlotState`` / ``SlotEngine``
   * ``updates`` — version-tagged plans for live refactorization
   * ``metrics`` — per-pattern + global telemetry (``ServeMetrics``)
   * ``loadgen`` — request-mix load generator (hot / uniform / adversarial)
 """
-from repro.serve.batcher import MicroBatcher, normalize_max_batch, pad_width
+from repro.serve.batcher import (
+    AdmissionQueue,
+    MicroBatcher,
+    normalize_max_batch,
+    pad_width,
+)
 from repro.serve.loadgen import (
     MIXES,
     adversarial_patterns,
@@ -50,9 +63,17 @@ from repro.serve.service import (
     SolveTicket,
     direct_reference,
 )
+from repro.serve.slots import (
+    SlotDispatcher,
+    SlotEngine,
+    SlotRequest,
+    SlotsFull,
+    SlotState,
+)
 from repro.serve.updates import VersionedPlans
 
 __all__ = [
+    "AdmissionQueue",
     "MicroBatcher",
     "normalize_max_batch",
     "pad_width",
@@ -73,5 +94,10 @@ __all__ = [
     "SolveService",
     "SolveTicket",
     "direct_reference",
+    "SlotDispatcher",
+    "SlotEngine",
+    "SlotRequest",
+    "SlotsFull",
+    "SlotState",
     "VersionedPlans",
 ]

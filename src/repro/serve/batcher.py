@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Hashable, List, Optional, Tuple
 
 
@@ -125,6 +125,79 @@ class MicroBatcher:
     def close(self) -> None:
         """Stop admissions and wake every worker; queued groups still
         drain (flushed immediately) before ``next_batch`` returns None."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+
+class AdmissionQueue:
+    """Slot-allocation admission for the continuous engine
+    (``repro.serve.slots``).
+
+    The microbatcher above implements *group formation*: it deliberately
+    holds a route's backlog for up to ``max_wait_us`` hoping more
+    requests arrive to share the dispatch — a batch-formation deadline
+    that is itself a small synchronization barrier. Continuous mode has
+    no such barrier: requests go into persistent device lanes, so there
+    is nothing to form. This queue is therefore a plain FIFO — ``take``
+    blocks only while the queue is EMPTY, and hands the dispatch loop
+    everything queued the moment it comes back for work. The only wait
+    a request ever experiences here is for the loop, never for company.
+
+    The dispatcher routes taken items into per-engine pending deques
+    before dispatching them; ``mark_pending`` lets it report that
+    in-hand count so ``depth`` (the service's back-pressure signal)
+    keeps covering requests that are accepted but not yet in a lane.
+    """
+
+    UNBOUNDED = 1 << 30  # take(k) cap meaning "everything queued"
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._items: deque = deque()
+        self._pending = 0  # items the consumer took but hasn't dispatched
+        self._closed = False
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._items) + self._pending
+
+    def mark_pending(self, n: int) -> None:
+        """Report the consumer's in-hand (taken, undispatched) count."""
+        with self._cond:
+            self._pending = n
+
+    def put(self, item) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("admission queue is closed")
+            self._items.append(item)
+            self._cond.notify()
+
+    def take(self, k: int) -> List:
+        """Up to ``k`` queued items, FIFO. Blocks while empty; an empty
+        list means closed AND drained — the dispatch-loop exit signal
+        (mirrors ``MicroBatcher.next_batch`` returning None)."""
+        with self._cond:
+            while not self._items:
+                if self._closed:
+                    return []
+                self._cond.wait()
+            take = min(k, len(self._items))
+            return [self._items.popleft() for _ in range(take)]
+
+    def drain(self) -> List:
+        """Everything queued right now, without blocking — the
+        dispatcher's top-up path while it still has pending work in
+        hand (blocking would stall those)."""
+        with self._cond:
+            items = list(self._items)
+            self._items.clear()
+            return items
+
+    def close(self) -> None:
+        """Stop admissions and wake the dispatch loop; queued requests
+        still drain before ``take`` returns empty."""
         with self._cond:
             self._closed = True
             self._cond.notify_all()

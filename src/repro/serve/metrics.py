@@ -5,7 +5,13 @@ in aggregate:
 
   * queue depth (how far behind the workers are),
   * the batch-size histogram (is microbatching actually coalescing?),
-  * p50/p95/p99 end-to-end latency plus the queue-wait share of it,
+  * p50/p95/p99/p99.9 end-to-end latency plus the queue-wait share of
+    it (p99.9 because the continuous engine exists for the tail of the
+    tail — the open-loop regime where a batch-formation deadline shows
+    up two nines out),
+  * continuous mode: slot-pass count, the occupancy histogram (are the
+    lanes actually full?) and time-in-queue vs time-in-slot — the split
+    that says whether latency is spent waiting for a lane or solving,
   * throughput (completed solves per second),
   * plan-cache hit rate and live plan versions.
 
@@ -24,7 +30,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-PERCENTILES = (50, 95, 99)
+PERCENTILES = (50, 95, 99, 99.9)
 
 
 class LatencyReservoir:
@@ -43,7 +49,7 @@ class LatencyReservoir:
             self.add(s)
 
     def percentiles_us(self) -> Dict[str, float]:
-        """{"p50": ..., "p95": ..., "p99": ...} in microseconds (NaN-free:
+        """{"p50": ..., ..., "p99.9": ...} in microseconds (NaN-free:
         empty reservoirs report 0.0 so JSON stays parseable)."""
         return _percentiles_us(np.fromiter(self._samples, dtype=np.float64))
 
@@ -92,6 +98,11 @@ class ServeMetrics:
             self._solve = LatencyReservoir()  # per-batch device solve time
             self._grouped_batches = 0  # cross-pattern width-class batches
             self._grouped_hist: Counter = Counter()
+            # continuous mode: dispatch passes over the resident slots
+            self._slot_passes = 0
+            self._slot_occ_hist: Counter = Counter()  # occupancy -> passes
+            self._slot_width = 0  # lane count S of the last-seen engine
+            self._slot_time = LatencyReservoir()  # per-request time in slot
             self._t_first: Optional[float] = None
             self._t_last: Optional[float] = None
 
@@ -159,6 +170,39 @@ class ServeMetrics:
             self._solve.add(solve_seconds)
             self._mark_completion_locked()
 
+    def record_slot_pass(
+        self,
+        fps,
+        *,
+        queue_waits,
+        slot_times,
+        e2e,
+        solve_seconds: float,
+        occupancy: int,
+        n_slots: int,
+    ) -> None:
+        """One continuous-mode dispatch pass over the resident slots:
+        request j (pattern ``fps[j]``) rode one of the pass's
+        ``occupancy`` occupied lanes (of ``n_slots``). ``queue_waits``
+        is time-in-queue (submit -> lane insertion) and ``slot_times``
+        time-in-slot (insertion -> completion) — the two halves of
+        ``e2e``, split so an operator can see whether the tail comes
+        from waiting for a lane or from the solve itself. Completions
+        and latencies are attributed per pattern; the pass is counted
+        once, globally, like a grouped batch."""
+        with self._lock:
+            for fp, qw, el in zip(fps, queue_waits, e2e):
+                p = self._pat(fp)
+                p.completed += 1
+                p.queue_wait.add(qw)
+                p.e2e.add(el)
+            self._slot_time.extend(slot_times)
+            self._slot_passes += 1
+            self._slot_occ_hist[occupancy] += 1
+            self._slot_width = n_slots
+            self._solve.add(solve_seconds)
+            self._mark_completion_locked()
+
     def record_failure(self, fp: str, size: int) -> None:
         with self._lock:
             self._pat(fp).failed += size
@@ -214,10 +258,14 @@ class ServeMetrics:
                 if self._t_first is not None
                 else 0.0
             )
-            # width-class grouped batches are counted once, globally (the
-            # per-pattern loop above only saw their per-request shares)
-            tot_batches += self._grouped_batches
+            # width-class grouped batches and slot passes are counted
+            # once, globally (the per-pattern loop above only saw their
+            # per-request shares)
+            tot_batches += self._grouped_batches + self._slot_passes
             hist.update(self._grouped_hist)
+            occ_total = sum(
+                occ * cnt for occ, cnt in self._slot_occ_hist.items()
+            )
             out = {
                 "submitted": tot_sub,
                 "completed": tot_done,
@@ -240,6 +288,21 @@ class ServeMetrics:
                 "latency_us": _percentiles_us(np.asarray(all_e2e)),
                 "queue_wait_us": _percentiles_us(np.asarray(all_queue)),
                 "batch_solve_us": self._solve.percentiles_us(),
+                # continuous mode: dispatch passes over the resident
+                # slots (zeros when the service runs pure microbatch)
+                "slots": {
+                    "passes": self._slot_passes,
+                    "n_slots": self._slot_width,
+                    "occupancy_hist": dict(
+                        sorted(self._slot_occ_hist.items())
+                    ),
+                    "mean_occupancy": round(
+                        occ_total / self._slot_passes, 2
+                    )
+                    if self._slot_passes
+                    else 0.0,
+                    "time_in_slot_us": self._slot_time.percentiles_us(),
+                },
                 "per_pattern": per_pattern,
             }
         if extra:
@@ -262,6 +325,13 @@ def pretty(snap: dict) -> str:
         f"queue wait us: {snap['queue_wait_us']}",
         f"batch size hist: {snap['batch_size_hist']}",
     ]
+    slots = snap.get("slots") or {}
+    if slots.get("passes"):
+        lines.append(
+            f"slots: {slots['passes']} passes over {slots['n_slots']} "
+            f"lanes (mean occupancy {slots['mean_occupancy']}), "
+            f"time in slot us: {slots['time_in_slot_us']}"
+        )
     if "plan_cache" in snap:
         lines.append(f"plan cache: {snap['plan_cache']}")
     for fp, p in snap.get("per_pattern", {}).items():

@@ -31,6 +31,15 @@ state immediately (``result()`` raises ``QueueFullError``) instead of
 letting the queue grow without bound; rejections are counted in the
 metrics. Version swaps and numeric updates are never rejected — only
 solve admissions are.
+
+``mode="continuous"`` replaces microbatch formation with persistent
+device-resident RHS slots (``repro.serve.slots``): admission is slot
+allocation into an always-running dispatch loop — no batch-formation
+deadline, no drain barrier between dispatches. Both correctness
+contracts above carry over unchanged (slot tickets record
+``batch_width = n_slots``, ``batch_position = lane`` and replay through
+``GroupReplay``); patterns whose binding cannot group (e.g. elastic
+bounds) transparently fall back to the microbatch path.
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ import numpy as np
 from repro.pipeline import GroupBank, PlanCache, TriangularSolver, grouped_solve
 from repro.serve.batcher import MicroBatcher, normalize_max_batch, pad_width
 from repro.serve.metrics import ServeMetrics, pretty
+from repro.serve.slots import SlotDispatcher, SlotEngine
 from repro.serve.updates import VersionedPlans
 from repro.sparse.csr import CSRMatrix, pattern_fingerprint
 
@@ -63,7 +73,7 @@ class SolveTicket:
     __slots__ = (
         "fingerprint", "version", "batch_width", "batch_position",
         "served_by", "rejected", "_event", "_result", "_error",
-        "t_submit", "t_done",
+        "t_submit", "t_admit", "t_done",
     )
 
     def __init__(self, fingerprint: str, version: int):
@@ -80,6 +90,7 @@ class SolveTicket:
         self._result = None
         self._error: Optional[BaseException] = None
         self.t_submit = time.perf_counter()
+        self.t_admit: Optional[float] = None  # continuous: lane insertion
         self.t_done: Optional[float] = None
 
     def done(self) -> bool:
@@ -93,6 +104,15 @@ class SolveTicket:
         return self._result
 
     def _fulfill(self, x, error: Optional[BaseException] = None) -> None:
+        # exactly-once termination: a ticket that completed (or was
+        # rejected) can never be fulfilled again — a second fulfill is
+        # always a serving-loop bug (e.g. a lane double-completion), so
+        # it raises instead of silently overwriting the first result
+        if self._event.is_set():
+            raise RuntimeError(
+                f"ticket for pattern {self.fingerprint[:12]} fulfilled "
+                "twice"
+            )
         self._result = x
         self._error = error
         self.t_done = time.perf_counter()
@@ -185,6 +205,18 @@ class SolveService:
     ``backend="distributed"`` the worker loop additionally rounds each
     dispatch width up to a multiple of the mesh's ``data`` axis, so
     batches shard cleanly instead of padding inside the backend.
+
+    ``mode`` selects the serving engine: ``"microbatch"`` (default,
+    everything above) or ``"continuous"`` — persistent device-resident
+    RHS slots with an always-running dispatch loop per width class
+    (``repro.serve.slots``; ``n_slots`` lanes each, default
+    ``max_batch``, normalized UP to a power of two). Continuous mode
+    requires the backend to advertise the ``"slots"`` capability;
+    groupable patterns of one width class share an engine (cross-
+    pattern by construction, no ``width_class_batching`` flag needed),
+    while non-groupable patterns (elastic bounds, ``slack=N`` in the
+    plan defaults) fall back to the microbatch path — the service-level
+    ``mode`` knob is about the serving loop, not the solve graph.
     """
 
     def __init__(
@@ -195,6 +227,8 @@ class SolveService:
         max_queue: Optional[int] = None,
         n_workers: int = 1,
         width_class_batching: bool = False,
+        mode: str = "microbatch",
+        n_slots: Optional[int] = None,
         cache: Optional[PlanCache] = None,
         strategy: str = "auto",
         **plan_defaults,
@@ -204,6 +238,38 @@ class SolveService:
             raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         self.max_queue = max_queue
         self.width_class_batching = width_class_batching
+        if mode not in ("microbatch", "continuous"):
+            raise ValueError(
+                f"mode must be 'microbatch' or 'continuous'; got {mode!r}"
+            )
+        self.mode = mode
+        self.n_slots = self.max_batch if n_slots is None else int(n_slots)
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if mode == "continuous":
+            from repro.backends import get_backend
+
+            backend = plan_defaults.get("backend", "scan")
+            if "slots" not in get_backend(backend).capabilities():
+                raise ValueError(
+                    f"mode='continuous' needs a backend with the 'slots' "
+                    f"capability (resident RHS slots); backend "
+                    f"{backend!r} does not advertise it"
+                )
+            # continuous serving lives on groupable (bankable) bindings;
+            # left to itself, strategy='auto' may flip deep patterns to
+            # elastic mode, whose bounds cannot join a bank — silently
+            # routing a slice of traffic through the microbatch fallback
+            # and re-importing the formation deadline this mode removes.
+            # Pin auto selection to bulk-synchronous unless the caller
+            # explicitly opts a pattern into elastic (those still serve,
+            # via the fallback path).
+            plan_defaults.setdefault("mode", "bsp")
+        self._engines: Dict[tuple, SlotEngine] = {}  # wc -> slot engine
+        # one dispatch loop drives every engine (see slots module doc)
+        self._dispatcher = (
+            SlotDispatcher() if mode == "continuous" else None
+        )
         self.cache = cache if cache is not None else PlanCache()
         self._plan_defaults = dict(strategy=strategy, **plan_defaults)
         # mesh-sharded serving: batches shard over the mesh's 'data' axis,
@@ -311,6 +377,49 @@ class SolveService:
                 "itself (auto-registers) or call register(a) first"
             ) from None
 
+    # --------------------------------------------------- continuous engines
+    def _key_live(self, key) -> bool:
+        """Bank-lane liveness for the slot engines' prune: a
+        ``(fingerprint, version)`` key is prunable once its version has
+        retired from the registry. Queried at prune time under the bank
+        lock — any queued or in-lane request pins its version, so a
+        live lane can never be seen as dead."""
+        fp, version = key
+        vp = self._patterns.get(fp)
+        return vp is not None and version in vp.live_versions()
+
+    def _key_complete(self, key, count: int) -> None:
+        """Unpin ``count`` served requests from their admitted version
+        (the slot engines' mirror of the worker loops'
+        ``VersionedPlans.complete``)."""
+        fp, version = key
+        self._patterns[fp].complete(version, count)
+
+    def _engine_for(self, wc) -> SlotEngine:
+        """The width class's slot engine, created on first use (lanes
+        only materialize on device for classes that actually serve)."""
+        with self._plock:
+            eng = self._engines.get(wc)
+            if eng is None:
+                eng = self._engines[wc] = SlotEngine(
+                    n_slots=self.n_slots,
+                    metrics=self.metrics,
+                    is_live=self._key_live,
+                    on_complete=self._key_complete,
+                    name=_width_class_label(wc),
+                )
+            return eng
+
+    def _backlog(self) -> int:
+        """Total admission backlog across both serving paths — the
+        quantity ``max_queue`` bounds."""
+        with self._plock:
+            engines = list(self._engines.values())
+        depth = self._batcher.depth()
+        if self._dispatcher is not None:
+            depth += self._dispatcher.depth()
+        return depth + sum(e.state.occupancy for e in engines)
+
     # ------------------------------------------------------------- serving
     def submit(
         self,
@@ -355,13 +464,32 @@ class SolveService:
         # check-then-put is advisory (racing submits may briefly overshoot
         # by n_producers), which is the standard cheap admission-control
         # trade-off — the queue stays O(max_queue), never unbounded.
-        if (
-            self.max_queue is not None
-            and self._batcher.depth() >= self.max_queue
-        ):
-            ticket = SolveTicket(fp, -1)
-            self.metrics.record_rejected(fp)
-            ticket._reject(self._batcher.depth(), self.max_queue)
+        if self.max_queue is not None:
+            depth = self._backlog()
+            if depth >= self.max_queue:
+                ticket = SolveTicket(fp, -1)
+                self.metrics.record_rejected(fp)
+                ticket._reject(depth, self.max_queue)
+                return ticket
+        # continuous mode: groupable patterns go to their width class's
+        # slot engine — admission is slot allocation, not group
+        # formation. Non-groupable bindings (elastic bounds have no
+        # banked twin) fall back to the microbatch path below.
+        if self.mode == "continuous" and vp.groupable:
+            version, solver = vp.admit()
+            ticket = SolveTicket(fp, version)
+            self.metrics.record_submit(fp)
+            try:
+                self._dispatcher.submit(
+                    self._engine_for(vp.width_class),
+                    ticket,
+                    (fp, version),
+                    solver,
+                    b,
+                )
+            except RuntimeError:
+                vp.complete(version)
+                raise
             return ticket
         version, _ = vp.admit()
         ticket = SolveTicket(fp, version)
@@ -567,6 +695,18 @@ class SolveService:
             dtype = np.dtype(solver.dtype)
             for w in widths:
                 np.asarray(solver.solve(np.zeros((vp.n, w), dtype)))
+        if self.mode == "continuous":
+            # compile the slot engines' variants per groupable pattern:
+            # the (n, S) insert/extract pair plus the resident pass at
+            # every pow2 prefix width — warmed in registration order, so
+            # the later patterns warm against the bank lane counts the
+            # steady state will use
+            for fp, vp in patterns:
+                if vp.groupable:
+                    version, solver = vp.current_entry()
+                    self._engine_for(vp.width_class).warm(
+                        (fp, version), solver
+                    )
         if not self.width_class_batching:
             return
         for wc, fps in classes.items():
@@ -619,6 +759,17 @@ class SolveService:
                 w.join(max(0.0, deadline - time.perf_counter()))
             if w.is_alive():
                 stuck.append(w.name)
+        # the slot dispatcher drains its queue and every engine's pending
+        # work before exiting — shutdown never strands a continuous-mode
+        # ticket
+        if self._dispatcher is not None:
+            joined = self._dispatcher.close(
+                None
+                if deadline is None
+                else max(0.0, deadline - time.perf_counter())
+            )
+            if not joined:
+                stuck.append("slot-dispatch")
         if stuck:
             with self._plock:
                 retained = len(self._pinned_keys)
@@ -660,16 +811,19 @@ class SolveService:
             width_classes = {
                 wc: sorted(fps) for wc, fps in self._width_classes.items()
             }
+            engines = dict(self._engines)
         wc_labels = {wc: _width_class_label(wc) for wc in width_classes}
         return self.metrics.snapshot(
-            queue_depth=self._batcher.depth(),
+            queue_depth=self._backlog(),
             extra={
                 "serving": {
+                    "mode": self.mode,
                     "n_workers": self.n_workers,
                     "workers_alive": sum(
                         w.is_alive() for w in self._workers
                     ),
                     "max_batch": self.max_batch,
+                    "n_slots": self.n_slots,
                     "batch_align": self._batch_align,
                     "width_class_batching": self.width_class_batching,
                     "mesh": dict(self._mesh.shape)
@@ -691,6 +845,10 @@ class SolveService:
                         # bank telemetry: live device lanes + restacks
                         "bank": self._banks[wc].describe()
                         if wc in self._banks
+                        else None,
+                        # continuous mode: the class's slot engine
+                        "slots": engines[wc].describe()
+                        if wc in engines
                         else None,
                     }
                     for wc, fps in width_classes.items()

@@ -40,7 +40,10 @@ class VersionedPlans:
         # width_class when cross-pattern batching is enabled.
         self.width_class = getattr(solver, "width_class", None)
         self.groupable = bool(getattr(solver, "supports_grouping", False))
-        self._lock = threading.Lock()
+        # a Condition, not a bare Lock: retirements notify waiters so
+        # tests (and operators) can wait for a superseded version to
+        # drain without sleep-polling (wait_retired)
+        self._lock = threading.Condition()
         self._versions: Dict[int, object] = {0: solver}
         self._pins: Dict[int, int] = {0: 0}
         self.current = 0
@@ -84,13 +87,26 @@ class VersionedPlans:
             self._retire_locked()
 
     def _retire_locked(self) -> None:
-        for v in [
+        dead = [
             v
             for v, pins in self._pins.items()
             if v != self.current and pins <= 0
-        ]:
+        ]
+        for v in dead:
             del self._versions[v]
             del self._pins[v]
+        if dead:
+            self._lock.notify_all()
+
+    def wait_retired(self, version: int, timeout: float = None) -> bool:
+        """Block until ``version`` has retired (drained and superseded);
+        True on retirement, False on timeout. The event-based
+        alternative to sleep-polling ``live_versions`` in tests and
+        drain-aware operators."""
+        with self._lock:
+            return self._lock.wait_for(
+                lambda: version not in self._versions, timeout
+            )
 
     # -------------------------------------------------------------- updates
     def update(self, a_or_data) -> int:

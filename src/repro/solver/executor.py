@@ -202,6 +202,66 @@ def solve_with_bank(bank: BankTensors, lane_idx, B) -> jax.Array:
     )
 
 
+# ------------------------------------------------- resident RHS slots
+# The continuous-batching serve engine (repro.serve.slots) keeps one
+# device-resident rhs bank B f[n, S] per width class: admission INSERTS a
+# request's b into a free slot (dynamic_update_slice — no host restack of
+# the whole batch), every dispatch-loop pass solves a pow2 lane prefix
+# of the bank through the same jitted banked kernel, and completion
+# EXTRACTS the finished slot's column. The slot index is a traced scalar,
+# so insert/extract compile exactly once per (n, S) shape and the pass
+# at most log2(S) times (one per pow2 prefix width).
+
+@jax.jit
+def _insert_lane(B, lane, b):
+    return jax.lax.dynamic_update_slice(B, b[:, None], (0, lane))
+
+
+@jax.jit
+def _extract_lane(X, lane):
+    return jax.lax.dynamic_slice_in_dim(X, lane, 1, axis=1)[:, 0]
+
+
+def blank_rhs(n: int, slots: int, dtype) -> jax.Array:
+    """A zeroed device-resident rhs bank f[n, slots]."""
+    return jnp.zeros((n, slots), dtype)
+
+
+def insert_lane(B_res: jax.Array, lane: int, b) -> jax.Array:
+    """New resident bank with column ``lane`` replaced by ``b`` f[n] —
+    bits of every other column are untouched (``dynamic_update_slice``
+    moves bits unchanged; slot-neighbor independence is property-tested
+    in tests/test_serve_slots.py). Pure: the input bank is not mutated,
+    so a dispatch pass holding the old reference keeps solving the
+    snapshot it captured."""
+    return _insert_lane(
+        B_res, jnp.int32(lane), jnp.asarray(b, B_res.dtype)
+    )
+
+
+def extract_lane(X: jax.Array, lane: int) -> jax.Array:
+    """Column ``lane`` of ``X`` f[n, S] as f[n] (bits unchanged)."""
+    return _extract_lane(X, jnp.int32(lane))
+
+
+def solve_resident(bank: BankTensors, lane_idx, B_res) -> jax.Array:
+    """The continuous-mode solve pass: identical to ``solve_with_bank``
+    (same jitted kernel, bitwise-identical bits per (width, column)),
+    except ``B_res`` is already device-resident — nothing re-uploads.
+    The pass width is ``len(lane_idx)``: the engine allocates lanes
+    lowest-first and dispatches the smallest pow2 lane prefix covering
+    the occupied slots, so a lightly-loaded bank never pays the full-S
+    solve (``lax.slice_in_dim`` moves bits unchanged, so the result is
+    still bitwise-identical to solving a freshly-stacked width-w batch
+    of the same columns). Free slots inside the prefix carry stale
+    columns whose results are simply never extracted (lane independence
+    makes them harmless to live neighbors)."""
+    w = len(lane_idx)
+    if w != B_res.shape[1]:
+        B_res = jax.lax.slice_in_dim(B_res, 0, w, axis=1)
+    return solve_with_bank(bank, lane_idx, B_res)
+
+
 def _step_mrhs(x, acc, rows, cols, v, d, a, b_pad):
     """Multi-RHS twin of ``_step_single`` (value lanes widen to m);
     shared by the bulk scan and the elastic macro-step body."""

@@ -337,7 +337,7 @@ def test_multi_worker_multi_route_bitwise_with_updates():
                 fp = fps[k % len(fps)]
                 svc.numeric_update(fp, data[fp] * (1.0 + 0.1 * (k + 1)))
                 k += 1
-                time.sleep(0.002)
+                stop.wait(0.002)  # responsive shutdown, no sleep tail
 
         threads = [
             threading.Thread(target=client, args=(i,))
@@ -400,16 +400,18 @@ def test_close_timeout_retains_pins_until_workers_exit():
     fp = svc.register(m)
     vp = svc.pattern(fp)
     release = threading.Event()
+    picked = threading.Event()
     real = vp.solver_for(0)
 
     class _Stall:
         def solve(self, B):
+            picked.set()
             release.wait(30)
             return real.solve(B)
 
     vp._versions[0] = _Stall()
     t = svc.submit(fp, np.ones(100, np.float32))
-    time.sleep(0.05)  # let the worker pick the batch up and stall
+    assert picked.wait(10)  # the worker holds the batch and is stalled
     report = svc.close(timeout=0.2)
     assert report["workers_alive"], "worker should still be stalled"
     assert report["pins_released"] == 0 and report["pins_retained"] == 1

@@ -1,0 +1,134 @@
+"""Continuous-serving soak: sustained concurrent load + live updates.
+
+Eight open-loop client threads hammer a ``mode="continuous"`` service
+for ``REPRO_SOAK_SECONDS`` (default 10) wall-clock seconds while a
+ninth thread interleaves ``numeric_update`` calls — the adversarial
+regime for the slot engine: admissions race lane churn races version
+retirement, with no quiet period ever.
+
+Every single served result is bitwise-checked against
+``direct_reference`` for the exact ``(solver, width, lane)`` the engine
+recorded, and the final books must balance: every submitted ticket
+terminates exactly once (no lost tickets, no double fulfillment), the
+engines' admitted == completed, and nothing is stranded at shutdown.
+
+``slow``-marked: tier-1 deselects it; CI's serve-soak job runs it with
+a short ``REPRO_SOAK_SECONDS``.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.pipeline import TriangularSolver
+from repro.serve import QueueFullError, SolveService, direct_reference
+from repro.sparse import shifted_coupling_lower
+from repro.sparse.generators import erdos_renyi_lower
+
+pytestmark = pytest.mark.slow
+
+SOAK_SECONDS = float(os.environ.get("REPRO_SOAK_SECONDS", "10"))
+N_CLIENTS = 8
+N = 96
+
+
+def test_continuous_soak_bitwise_under_updates():
+    mats = [shifted_coupling_lower(N, j, seed=20 + j) for j in range(4)]
+    mats.append(erdos_renyi_lower(128, 0.04, seed=31))
+    svc = SolveService(mode="continuous", strategy="wavefront")
+    stop = threading.Event()
+    checked = []  # (client, i) per bitwise-verified result
+    mismatches = []
+    errors = []
+    submitted = [0] * N_CLIENTS
+    terminated = [0] * N_CLIENTS
+    updates = [0]
+    try:
+        fps = [svc.register(m) for m in mats]
+        svc.prewarm()
+
+        def client(cid):
+            rng = np.random.default_rng(1000 + cid)
+            i = 0
+            while not stop.is_set():
+                j = int(rng.integers(len(mats)))
+                n = mats[j].n_rows
+                b = rng.standard_normal(n).astype(np.float32)
+                submitted[cid] += 1
+                try:
+                    t = svc.submit(fps[j], b)
+                    x = t.result(timeout=120)
+                except QueueFullError:
+                    # back-pressure is a valid terminal outcome, not a
+                    # lost ticket
+                    terminated[cid] += 1
+                    continue
+                except Exception as exc:  # pragma: no cover - fail info
+                    errors.append((cid, i, repr(exc)))
+                    terminated[cid] += 1
+                    continue
+                terminated[cid] += 1
+                want = direct_reference(
+                    t.served_by, b, t.batch_width, t.batch_position
+                )
+                if x.tobytes() != want.tobytes():
+                    mismatches.append((cid, i, fps[j]))
+                else:
+                    checked.append((cid, i))
+                i += 1
+                # open loop: pace, don't wait for capacity
+                stop.wait(float(rng.uniform(0.001, 0.004)))
+
+        def updater():
+            rng = np.random.default_rng(99)
+            while not stop.is_set():
+                j = int(rng.integers(len(mats)))
+                scale = 1.0 + 0.25 * float(rng.uniform())
+                svc.numeric_update(fps[j], mats[j].data * scale)
+                updates[0] += 1
+                stop.wait(0.05)
+
+        threads = [
+            threading.Thread(target=client, args=(c,), name=f"soak-{c}")
+            for c in range(N_CLIENTS)
+        ]
+        threads.append(threading.Thread(target=updater, name="soak-upd"))
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        time.sleep(SOAK_SECONDS)
+        stop.set()
+        for t in threads:
+            t.join(300)
+        assert all(not t.is_alive() for t in threads)
+        elapsed = time.perf_counter() - t0
+
+        assert errors == []
+        assert mismatches == []
+        # zero lost / duplicated tickets: every submission terminated
+        # exactly once (result, rejection, or error — all counted)
+        assert submitted == terminated
+        assert len(checked) == len(set(checked))
+        stats = svc.stats()
+        assert stats["submitted"] == sum(submitted)
+        assert stats["failed"] == 0
+        # the run actually exercised the engine and the updater
+        assert len(checked) >= N_CLIENTS * 10
+        assert updates[0] >= 3
+        assert stats["slots"]["passes"] >= 1
+        for eng in svc._engines.values():
+            d = eng.describe()
+            assert d["admitted"] == d["completed"]  # nothing stranded
+            assert d["occupancy"] == 0
+        print(
+            f"\nsoak: {len(checked)} bitwise-verified solves, "
+            f"{updates[0]} numeric updates, {elapsed:.1f}s, "
+            f"{stats['slots']['passes']} slot passes"
+        )
+    finally:
+        stop.set()
+        report = svc.close(timeout=120)
+    assert report["workers_alive"] == []
+    assert report["pins_retained"] == 0
