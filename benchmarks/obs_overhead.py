@@ -1,0 +1,239 @@
+"""Observability overhead — the ``repro.obs`` acceptance bench.
+
+Tracing must be free when off and cheap when on. This bench enforces
+both on the corpus hot path (warm plans, compiled executors — the
+steady-state serving regime where per-solve overhead matters):
+
+  * **disabled** (bar: <= 0.5%): the off path of every instrumentation
+    site is one module-flag check returning a shared null span. The
+    per-call cost is microbenchmarked directly, multiplied by the number
+    of sites one warm solve actually crosses (counted from a traced
+    solve), and compared against the measured solve latency.
+  * **enabled** (bar: <= 3% median): per-sample interleaved A/B — every
+    iteration times one solve with tracing off then one with tracing on,
+    so host-load drift lands on both arms identically (block-wise A/B on
+    a shared host showed +-10% drift between blocks, dwarfing the real
+    ~2us/solve span cost). The overhead is the ratio of the two arm
+    medians, minimum over ``rounds`` repeats; aggregate acceptance is
+    the geomean across corpus matrices.
+  * **round-trip**: one ``plan(strategy="auto", cache=..., timed=True)``
+    + solve traced end-to-end, exported as Chrome trace JSON, re-parsed
+    and structurally validated (monotonic ts, matched B/E pairs), and
+    required to contain spans from >= 4 layers (inspector, autotune,
+    cache, backend, executor).
+
+  PYTHONPATH=src:. python -m benchmarks.obs_overhead
+  PYTHONPATH=src:. python -m benchmarks.obs_overhead --smoke --json o.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, geomean, solver_for, write_json_rows
+from repro import obs
+from repro.pipeline import PlanCache, TriangularSolver
+
+DISABLED_BAR = 0.005  # off-path instrumentation cost / solve latency
+ENABLED_BAR = 0.03  # traced solve latency / untraced solve latency - 1
+MIN_LAYERS = 4  # distinct span cats required in the round-trip trace
+
+LAYERS = ("inspector", "autotune", "cache", "backend", "executor")
+
+
+def _paired_medians_us(fn, b, reps: int, buf) -> tuple:
+    """(median_off_us, median_on_us) from per-sample interleaved timing:
+    each rep times one untraced solve then one traced solve, so slow
+    phases of a shared host inflate both arms alike."""
+    off, on = [], []
+    for _ in range(reps):
+        obs.disable()
+        t0 = time.perf_counter_ns()
+        fn(b).block_until_ready()
+        off.append(time.perf_counter_ns() - t0)
+        obs.enable(buf)
+        t0 = time.perf_counter_ns()
+        fn(b).block_until_ready()
+        on.append(time.perf_counter_ns() - t0)
+    obs.disable()
+    return float(np.median(off)) / 1e3, float(np.median(on)) / 1e3
+
+
+def measure_null_site_ns(iters: int = 200_000) -> float:
+    """ns per disabled instrumentation site (span enter/exit + one
+    ``set`` + a counter bump — a deliberately pessimistic site)."""
+    assert not obs.is_enabled()
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        with obs.span("obs_overhead.probe", cat="executor") as sp:
+            sp.set(probe=True)
+        obs.counter_add("obs_overhead.probe")
+    return (time.perf_counter_ns() - t0) / iters
+
+
+def count_sites_per_solve(fn, b) -> int:
+    """Instrumentation sites one warm solve crosses, counted by tracing
+    a single solve into a fresh buffer."""
+    buf = obs.TraceBuffer("obs_overhead.count")
+    with obs.tracing(buf):
+        fn(b).block_until_ready()
+    # counters() values are increments here (fresh buffer)
+    return len(buf) + sum(buf.counters().values())
+
+
+def measure_matrix(name, L, *, rounds: int, reps: int, cache) -> dict:
+    fn, b, _ = solver_for(L, strategy="growlocal", cache=cache)
+    buf = obs.TraceBuffer(f"obs_overhead.{name}")
+    overheads, offs, ons = [], [], []
+    for _ in range(rounds):
+        buf.clear()
+        o_off, o_on = _paired_medians_us(fn, b, reps, buf)
+        offs.append(o_off)
+        ons.append(o_on)
+        overheads.append(o_on / o_off - 1.0)
+    # each round is internally drift-immune (paired sampling); the
+    # median across rounds drops rounds a scheduler hiccup still skewed
+    # without biasing the estimate toward either arm
+    overhead = float(np.median(overheads))
+    off, on = float(np.median(offs)), float(np.median(ons))
+    n_sites = count_sites_per_solve(fn, b)
+    site_ns = measure_null_site_ns()
+    return {
+        "matrix": name,
+        "n": L.n_rows,
+        "solve_us_off": round(off, 2),
+        "solve_us_on": round(on, 2),
+        "enabled_overhead": overhead,
+        "sites_per_solve": n_sites,
+        "null_site_ns": round(site_ns, 1),
+        "disabled_overhead": (n_sites * site_ns) / (off * 1e3),
+    }
+
+
+def roundtrip_trace(L, trace_path: str) -> dict:
+    """Trace one cold ``plan()`` + timed solve end-to-end, export, and
+    re-parse — the cross-layer acceptance artifact."""
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(L.n_rows).astype(np.float32)
+    buf = obs.TraceBuffer("obs_overhead.roundtrip")
+    with obs.tracing(buf):
+        solver = TriangularSolver.plan(
+            L, strategy="auto", cache=PlanCache(), timed=True
+        )
+        x, _steps = solver.solve_timed(b)
+    # correctness spot-check so the artifact is a real solve, not a stub
+    from repro.sparse.csr import csr_to_dense
+
+    r = csr_to_dense(L) @ np.asarray(x, np.float64) - b
+    assert float(np.max(np.abs(r))) < 1e-3 * max(1.0, float(np.abs(b).max()))
+    payload = obs.export_chrome_trace(trace_path, buf)
+    reparsed = obs.load_chrome_trace(trace_path)
+    report = obs.validate_chrome_trace(reparsed)
+    assert payload["schema"] == obs.TRACE_SCHEMA
+    layers = [c for c in report["cats"] if c in LAYERS]
+    if len(layers) < MIN_LAYERS:
+        raise SystemExit(
+            f"round-trip trace spans only layers {layers} "
+            f"(need >= {MIN_LAYERS} of {list(LAYERS)})"
+        )
+    return {**report, "layers": layers, "trace": trace_path}
+
+
+def run(csv_rows, *, smoke: bool = False, trace_path: str = None) -> dict:
+    mats = dataset("corpus")
+    rounds, reps = (5, 20) if smoke else (7, 50)
+    if smoke:
+        mats = mats[:2]
+    cache = PlanCache()
+    print(
+        f"# obs_overhead — corpus hot path, {len(mats)} matrices, "
+        f"{rounds} rounds x {reps} paired off/on reps "
+        f"(median of round overheads)"
+    )
+    print(
+        f"{'matrix':22s} {'off us':>9s} {'on us':>9s} {'on +%':>7s} "
+        f"{'sites':>6s} {'site ns':>8s} {'off +%':>8s}"
+    )
+    per = []
+    for name, L in mats:
+        m = measure_matrix(name, L, rounds=rounds, reps=reps, cache=cache)
+        per.append(m)
+        print(
+            f"{m['matrix']:22s} {m['solve_us_off']:9.1f} "
+            f"{m['solve_us_on']:9.1f} {100 * m['enabled_overhead']:7.2f} "
+            f"{m['sites_per_solve']:6d} {m['null_site_ns']:8.1f} "
+            f"{100 * m['disabled_overhead']:8.4f}"
+        )
+        csv_rows.append(
+            (
+                f"obs_overhead.{m['matrix']}",
+                m["solve_us_on"],
+                round(m["enabled_overhead"], 5),
+            )
+        )
+    # aggregate bars: geomean of (1 + overhead) across the corpus — one
+    # noisy matrix cannot mask a systemic regression, nor sink the run
+    enabled = geomean([1.0 + m["enabled_overhead"] for m in per]) - 1.0
+    disabled = max(m["disabled_overhead"] for m in per)
+    print(
+        f"enabled overhead geomean {100 * enabled:.2f}% "
+        f"(bar <= {100 * ENABLED_BAR:g}%), disabled worst-case "
+        f"{100 * disabled:.4f}% (bar <= {100 * DISABLED_BAR:g}%)"
+    )
+    ok = True
+    if disabled > DISABLED_BAR:
+        ok = False
+        print(f"MISS: disabled-path overhead {100 * disabled:.4f}%")
+    if enabled > ENABLED_BAR:
+        ok = False
+        print(f"MISS: enabled overhead {100 * enabled:.2f}%")
+
+    if trace_path is None:
+        trace_path = os.path.join(
+            tempfile.mkdtemp(prefix="obs_overhead."), "roundtrip.json"
+        )
+    rt = roundtrip_trace(mats[0][1], trace_path)
+    print(
+        f"round-trip trace: {rt['n_events']} events, {rt['n_pairs']} "
+        f"span pairs, layers={rt['layers']} -> {rt['trace']}"
+    )
+    csv_rows.append(
+        ("obs_overhead.roundtrip.pairs", float(rt["n_pairs"]),
+         "+".join(rt["layers"]))
+    )
+    if not ok:
+        raise SystemExit("obs_overhead: acceptance bars MISSED")
+    print("obs_overhead acceptance: PASS")
+    return {"per_matrix": per, "enabled_geomean": enabled,
+            "disabled_worst": disabled, "roundtrip": rt, "accepted": ok}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: 2 corpus matrices, fewer rounds",
+    )
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="where to write the round-trip Chrome trace "
+             "(default: a temp dir)",
+    )
+    args = ap.parse_args(argv)
+    csv_rows = []
+    out = run(csv_rows, smoke=args.smoke, trace_path=args.trace)
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    if args.json:
+        write_json_rows(args.json, csv_rows, ["obs_overhead"], obs=out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

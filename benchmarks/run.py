@@ -7,6 +7,11 @@ to seed the BENCH trajectory.
   PYTHONPATH=src python -m benchmarks.run                   # all tables
   PYTHONPATH=src python -m benchmarks.run t71 t72           # subset
   PYTHONPATH=src python -m benchmarks.run t7x --json out.json
+  PYTHONPATH=src python -m benchmarks.run t71 --trace trace.json
+
+``--trace PATH`` runs the selected tables under ``repro.obs`` tracing
+and writes a Chrome ``trace_event`` file (open in Perfetto / chrome
+about:tracing) plus the per-span aggregate as ``obs.*`` CSV rows.
 """
 from __future__ import annotations
 
@@ -37,11 +42,21 @@ def main() -> None:
         "--json", metavar="PATH", default=None,
         help="also write every row as machine-readable JSON to PATH",
     )
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="trace the run with repro.obs and write a Chrome "
+             "trace_event JSON to PATH (spans also appear as obs.* rows)",
+    )
     args = ap.parse_args()
     unknown = [t for t in args.tables if t not in TABLES]
     if unknown:
         ap.error(f"unknown tables {unknown}; available: {list(TABLES)}")
     which = args.tables or list(TABLES)
+    trace_buf = None
+    if args.trace:
+        from repro import obs
+
+        trace_buf = obs.enable()
     csv_rows = []
     for key in which:
         mod_name, desc = TABLES[key]
@@ -50,6 +65,13 @@ def main() -> None:
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         mod.run(csv_rows)
         print(f"[{key} done in {time.time()-t0:.1f}s]", flush=True)
+    if trace_buf is not None:
+        from repro import obs
+
+        obs.disable()
+        obs.export_chrome_trace(args.trace, trace_buf)
+        csv_rows.extend(obs.metrics_rows(trace_buf))
+        print(f"\n[trace: {len(trace_buf)} spans -> {args.trace}]")
     print("\n# CSV: name,us_per_call,derived")
     for name, val, derived in csv_rows:
         print(f"{name},{val},{derived}")

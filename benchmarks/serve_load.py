@@ -420,6 +420,19 @@ def run_worker_sweep(
     return sweep
 
 
+def _export_trace(trace_buf, path, csv_rows) -> None:
+    """Finish a ``--trace`` run: stop tracing, write the Chrome trace,
+    and fold the per-span aggregate into the CSV/JSON rows."""
+    if trace_buf is None:
+        return
+    from repro import obs
+
+    obs.disable()
+    obs.export_chrome_trace(path, trace_buf)
+    csv_rows.extend(obs.metrics_rows(trace_buf))
+    print(f"\n[trace: {len(trace_buf)} spans -> {path}]")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None)
@@ -472,7 +485,19 @@ def main(argv=None) -> None:
         help="open-loop runs per mode; each mode reports its best "
         "(min p99) trial",
     )
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="trace the run with repro.obs and write a Chrome "
+             "trace_event JSON to PATH (serve.microbatch / "
+             "serve.grouped_batch / serve.slot_pass spans plus the "
+             "plan/cache/backend layers underneath)",
+    )
     args = ap.parse_args(argv)
+    trace_buf = None
+    if args.trace:
+        from repro import obs
+
+        trace_buf = obs.enable()
     csv_rows = []
     if args.mode == "continuous":
         out = run_continuous(
@@ -492,6 +517,7 @@ def main(argv=None) -> None:
         )
         if args.smoke:
             print(pretty(out["hot"]["continuous"]["metrics"]))
+        _export_trace(trace_buf, args.trace, csv_rows)
         print("\n# CSV: name,us_per_call,derived")
         for name, val, derived in csv_rows:
             print(f"{name},{val},{derived}")
@@ -521,6 +547,7 @@ def main(argv=None) -> None:
         # the ISSUE's CI contract: results matched direct solves (enforced
         # above) and the metrics dict is printed
         print(pretty(out["hot"]["batched"]["metrics"]))
+    _export_trace(trace_buf, args.trace, csv_rows)
     print("\n# CSV: name,us_per_call,derived")
     for name, val, derived in csv_rows:
         print(f"{name},{val},{derived}")

@@ -73,6 +73,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.autotune.features import MatrixFeatures, dag_features, matrix_features
 from repro.core import DEFAULT_SLACK, Schedule, bsp_cost, schedule_step_count
 from repro.pipeline.registry import ScheduleOptions, get_scheduler
@@ -184,17 +185,28 @@ def select_schedule(
     rebuild the tuned Selection from whichever candidate wins the clock,
     and that candidate must keep the elastic decision."""
     o = options or ScheduleOptions()
-    f = features if features is not None else dag_features(dag)
+    if features is not None:
+        f = features
+    else:
+        with obs.span("autotune.features", cat="autotune", n=dag.n):
+            f = dag_features(dag)
     regime = classify(f, o.k)
-    best = None  # (cost, candidate, schedule)
-    scored = []
-    for c in shortlist(f, o):
-        s = get_scheduler(c.strategy)(dag, c.options)
-        cost = bsp_cost(dag, s, L=c.options.L)
-        scored.append(dataclasses.replace(c, cost=cost))
-        if best is None or cost < best[0]:
-            best = (cost, scored[-1], s)
-    cost, c, s = best
+    with obs.span(
+        "autotune.select", cat="autotune", regime=regime, n=dag.n
+    ) as sel_sp:
+        best = None  # (cost, candidate, schedule)
+        scored = []
+        for c in shortlist(f, o):
+            with obs.span(
+                f"autotune.score.{c.strategy}", cat="autotune"
+            ):
+                s = get_scheduler(c.strategy)(dag, c.options)
+                cost = bsp_cost(dag, s, L=c.options.L)
+            scored.append(dataclasses.replace(c, cost=cost))
+            if best is None or cost < best[0]:
+                best = (cost, scored[-1], s)
+        cost, c, s = best
+        sel_sp.set(strategy=c.strategy)
     if allow_elastic and o.slack == 0 and regime in ("serial", "banded"):
         # step-granular rule: elastic pays when the fused trip count
         # ceil(T / slack) is at most half the plan's step count T (the
@@ -341,7 +353,8 @@ def resolve_auto_full(
 
     m0, _ = mirror_to_lower(a, lower)
     dag = dag_from_lower_csr(m0)
-    f = matrix_features(m0, dag=dag)
+    with obs.span("autotune.features", cat="autotune", n=m0.n_rows):
+        f = matrix_features(m0, dag=dag)
     sel, winning_sched = select_schedule(
         dag, options, features=f, allow_elastic=allow_elastic
     )
@@ -388,17 +401,22 @@ def _timed_refine(
     timings = []
     trial = {}  # strategy -> solver
     for c in sel.candidates:
-        solver = TriangularSolver.plan(
-            a, strategy=c.strategy, options=c.options, lower=lower, **kw
-        )
-        trial[c.strategy] = solver
-        solver.solve(b)  # compile + warm up
-        ts = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            np.asarray(solver.solve(b))
-            ts.append(time.perf_counter() - t0)
-        timings.append((c.strategy, float(np.median(ts))))
+        with obs.span(
+            f"autotune.trial.{c.strategy}", cat="autotune", reps=reps
+        ) as tr_sp:
+            solver = TriangularSolver.plan(
+                a, strategy=c.strategy, options=c.options, lower=lower, **kw
+            )
+            trial[c.strategy] = solver
+            solver.solve(b)  # compile + warm up
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                np.asarray(solver.solve(b))
+                ts.append(time.perf_counter() - t0)
+            median = float(np.median(ts))
+            tr_sp.set(median_us=round(median * 1e6, 1))
+        timings.append((c.strategy, median))
     t_of = dict(timings)
     winner = min(sel.candidates, key=lambda c: t_of[c.strategy])
     tuned = dataclasses.replace(

@@ -38,6 +38,8 @@ from typing import Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 def _masked_value_gather_jit():
     """Build (once) the jitted gather+mask kernel — jit fuses the two
@@ -206,6 +208,26 @@ class BoundSolve(abc.ABC):
     @abc.abstractmethod
     def solve(self, b):
         """Solve for ``b`` f[n] or f[n, m]; returns x shaped like b."""
+
+    def solve_timed(self, b):
+        """``solve`` plus per-step device timings: returns ``(x, steps)``
+        where ``steps`` is a list of JSON-ready dicts, finest granularity
+        the backend can observe. This base fallback times the whole
+        blocked solve as ONE step (backends without segmented dispatch —
+        pallas tiles, shard_map supersteps — still report a synchronized
+        wall-clock); the scan backend overrides it with per-superstep
+        (bulk) / per-macro-step (elastic) segments."""
+        import time as _time
+
+        with obs.span("executor.solve_timed", cat="executor", n=self.n):
+            t0 = _time.perf_counter_ns()
+            x = self.solve(b)
+            try:
+                x.block_until_ready()
+            except AttributeError:  # plain ndarray result
+                pass
+            dur = _time.perf_counter_ns() - t0
+        return x, [{"step": 0, "n_steps": None, "us": round(dur / 1e3, 2)}]
 
     @abc.abstractmethod
     def update_values(self, data: np.ndarray) -> "BoundSolve":

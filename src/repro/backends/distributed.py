@@ -14,6 +14,7 @@ import threading
 
 import numpy as np
 
+from repro import obs
 from repro.backends.base import (
     Backend,
     BoundSolve,
@@ -78,11 +79,16 @@ class DistributedBoundSolve(BoundSolve):
     def update_values(self, data: np.ndarray) -> "DistributedBoundSolve":
         import jax.numpy as jnp
 
-        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
-        row_ids, col_idx, vals, diag, accum = self._args
-        vals, diag = masked_value_gather(
-            data, self._val_src, vals, self._diag_src, diag
-        )
+        with obs.span(
+            "backend.update_values", cat="backend", backend=self.backend
+        ):
+            data = jnp.asarray(
+                self._check_data(data).astype(self._np_dtype)
+            )
+            row_ids, col_idx, vals, diag, accum = self._args
+            vals, diag = masked_value_gather(
+                data, self._val_src, vals, self._diag_src, diag
+            )
         return DistributedBoundSolve(
             self._spec,
             self._mesh,
@@ -164,11 +170,22 @@ class DistributedBackend(Backend):
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
              interpret=None, mesh=None, slack=0) -> DistributedBoundSolve:
+        with obs.span(
+            "backend.bind",
+            cat="backend",
+            backend=self.name,
+            n=exec_plan.n,
+            slack=slack,
+        ):
+            return self._bind(
+                exec_plan, dtype=dtype, mesh=mesh, slack=slack
+            )
+
+    def _bind(self, exec_plan, *, dtype, mesh, slack):
         import jax.numpy as jnp
 
         from repro.solver.distributed import dist_plan_spec
 
-        del steps_per_tile, interpret  # no tiling; shard_map handles layout
         if slack > 0:
             # the elastic certificate's fused superstep bounds (the
             # cross-device barrier schedule) are computed and reported by

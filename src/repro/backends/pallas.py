@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.backends.base import (
     Backend,
     BoundSolve,
@@ -41,11 +42,16 @@ class PallasBoundSolve(BoundSolve):
     def update_values(self, data: np.ndarray) -> "PallasBoundSolve":
         import jax.numpy as jnp
 
-        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
-        row_ids, col_idx, vals, diag, accum = self._arrays
-        vals, diag = masked_value_gather(
-            data, self._val_src, vals, self._diag_src, diag
-        )
+        with obs.span(
+            "backend.update_values", cat="backend", backend=self.backend
+        ):
+            data = jnp.asarray(
+                self._check_data(data).astype(self._np_dtype)
+            )
+            row_ids, col_idx, vals, diag, accum = self._arrays
+            vals, diag = masked_value_gather(
+                data, self._val_src, vals, self._diag_src, diag
+            )
         return PallasBoundSolve(
             (row_ids, col_idx, vals, diag, accum),
             self._val_src,
@@ -95,6 +101,10 @@ class ElasticPallasBoundSolve(BoundSolve):
         self.n_entries = n_entries
         self._np_dtype = np_dtype
         self._interpret = interpret
+        # runtime side of the elastic certificate (cf. the scan elastic
+        # bound): the kernel grid runs exactly n_macro_steps tiles per
+        # solve, so a timed solve records that many executed macro-steps
+        self._runtime = {"timed_solves": 0, "macro_steps_executed": 0}
 
     def solve(self, b):
         from repro.kernels.ops import solve_with_elastic_kernel_arrays
@@ -105,14 +115,36 @@ class ElasticPallasBoundSolve(BoundSolve):
             interpret=self._interpret, dtype=self._np_dtype,
         )
 
+    def solve_timed(self, b):
+        """Whole-solve timing (the kernel grid is one dispatch — there
+        is no host-visible per-tile boundary), plus the elastic runtime
+        bookkeeping ``describe()`` reports against the certificate."""
+        x, steps = super().solve_timed(b)
+        self._runtime["timed_solves"] += 1
+        self._runtime["macro_steps_executed"] += self._elastic.n_macro_steps
+        return x, steps
+
     def update_values(self, data: np.ndarray) -> "ElasticPallasBoundSolve":
         import jax.numpy as jnp
 
-        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
-        wave_id, n_waves, row_ids, col_idx, vals, diag, accum = self._arrays
-        vals, diag = masked_value_gather(
-            data, self._val_src, vals, self._diag_src, diag
-        )
+        with obs.span(
+            "backend.update_values", cat="backend", backend=self.backend
+        ):
+            data = jnp.asarray(
+                self._check_data(data).astype(self._np_dtype)
+            )
+            (
+                wave_id,
+                n_waves,
+                row_ids,
+                col_idx,
+                vals,
+                diag,
+                accum,
+            ) = self._arrays
+            vals, diag = masked_value_gather(
+                data, self._val_src, vals, self._diag_src, diag
+            )
         return ElasticPallasBoundSolve(
             (wave_id, n_waves, row_ids, col_idx, vals, diag, accum),
             self._elastic,
@@ -128,6 +160,12 @@ class ElasticPallasBoundSolve(BoundSolve):
         T, k = self._arrays[2].shape
         W = self._arrays[3].shape[-1]
         ep = self._elastic
+        cert = ep.stats() if ep is not None else {}
+        rt = dict(self._runtime)
+        if rt["timed_solves"]:
+            rt["macro_steps_per_solve"] = round(
+                rt["macro_steps_executed"] / rt["timed_solves"], 2
+            )
         return {
             "backend": self.backend,
             "mode": "elastic",
@@ -145,6 +183,12 @@ class ElasticPallasBoundSolve(BoundSolve):
                 sum(a.size * a.dtype.itemsize
                     for a in self._arrays + (self._val_src, self._diag_src))
             ),
+            "runtime": {
+                **rt,
+                "predicted_macro_steps": ep.n_macro_steps,
+                "predicted_barrier_fusion": cert.get("barrier_fusion"),
+                "predicted_step_fusion": cert.get("step_fusion"),
+            },
         }
 
 
@@ -163,12 +207,25 @@ class PallasBackend(Backend):
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
              interpret=None, mesh=None, slack=0) -> BoundSolve:
+        with obs.span(
+            "backend.bind",
+            cat="backend",
+            backend=self.name,
+            n=exec_plan.n,
+            slack=slack,
+        ):
+            return self._bind(
+                exec_plan, dtype=dtype, steps_per_tile=steps_per_tile,
+                interpret=interpret, slack=slack,
+            )
+
+    def _bind(self, exec_plan, *, dtype, steps_per_tile, interpret,
+              slack) -> BoundSolve:
         import jax
         import jax.numpy as jnp
 
         from repro.kernels.ops import _pad_steps, kernel_plan_arrays
 
-        del mesh  # single-chip kernel
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         assert exec_plan.val_src is not None and exec_plan.diag_src is not None

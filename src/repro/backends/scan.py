@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.backends.base import (
     Backend,
     BoundSolve,
@@ -32,6 +33,13 @@ class ScanBoundSolve(BoundSolve):
         from repro.solver.executor import solve_with_plan
 
         return solve_with_plan(self._pa, b)
+
+    def solve_timed(self, b):
+        """Per-superstep timed solve: one jitted segment per superstep
+        of the plan (see ``solver.executor.solve_with_plan_timed``)."""
+        from repro.solver.executor import solve_with_plan_timed
+
+        return solve_with_plan_timed(self._pa, b)
 
     @classmethod
     def solve_grouped(cls, bounds, b_cols):
@@ -81,10 +89,19 @@ class ScanBoundSolve(BoundSolve):
     def update_values(self, data: np.ndarray) -> "ScanBoundSolve":
         import jax.numpy as jnp
 
-        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
-        vals, diag = masked_value_gather(
-            data, self._val_src, self._pa.vals, self._diag_src, self._pa.diag
-        )
+        with obs.span(
+            "backend.update_values", cat="backend", backend=self.backend
+        ):
+            data = jnp.asarray(
+                self._check_data(data).astype(self._np_dtype)
+            )
+            vals, diag = masked_value_gather(
+                data,
+                self._val_src,
+                self._pa.vals,
+                self._diag_src,
+                self._pa.diag,
+            )
         new = ScanBoundSolve(
             self._pa._replace(vals=vals, diag=diag),
             self._val_src,  # index tensors shared, read-only
@@ -130,19 +147,45 @@ class ElasticScanBoundSolve(BoundSolve):
         self._np_dtype = np_dtype
         self.n = ea.n
         self.n_entries = n_entries
+        # runtime side of the elastic certificate: what timed solves
+        # actually executed, reported by describe() next to the
+        # certificate's predicted fusion ratios (fresh per bound; an
+        # update_values swap starts a new runtime history)
+        self._runtime = {"timed_solves": 0, "macro_steps_executed": 0}
 
     def solve(self, b):
         from repro.solver.executor import solve_with_elastic
 
         return solve_with_elastic(self._ea, b)
 
+    def solve_timed(self, b):
+        """Per-macro-step timed elastic solve; records the actual
+        macro-step count into the bound's runtime telemetry so
+        ``describe()`` can put measured execution next to the
+        certificate's predicted ``barrier_fusion``."""
+        from repro.solver.executor import solve_with_elastic_timed
+
+        x, steps = solve_with_elastic_timed(self._ea, b)
+        self._runtime["timed_solves"] += 1
+        self._runtime["macro_steps_executed"] += len(steps)
+        return x, steps
+
     def update_values(self, data: np.ndarray) -> "ElasticScanBoundSolve":
         import jax.numpy as jnp
 
-        data = jnp.asarray(self._check_data(data).astype(self._np_dtype))
-        vals, diag = masked_value_gather(
-            data, self._val_src, self._ea.vals, self._diag_src, self._ea.diag
-        )
+        with obs.span(
+            "backend.update_values", cat="backend", backend=self.backend
+        ):
+            data = jnp.asarray(
+                self._check_data(data).astype(self._np_dtype)
+            )
+            vals, diag = masked_value_gather(
+                data,
+                self._val_src,
+                self._ea.vals,
+                self._diag_src,
+                self._ea.diag,
+            )
         return ElasticScanBoundSolve(
             self._ea._replace(vals=vals, diag=diag),
             self._elastic,
@@ -155,6 +198,12 @@ class ElasticScanBoundSolve(BoundSolve):
     def describe(self) -> dict:
         M, S, k = self._ea.row_ids.shape
         W = self._ea.col_idx.shape[-1]
+        cert = self._elastic.stats() if self._elastic is not None else {}
+        rt = dict(self._runtime)
+        if rt["timed_solves"]:
+            rt["macro_steps_per_solve"] = round(
+                rt["macro_steps_executed"] / rt["timed_solves"], 2
+            )
         return {
             "backend": self.backend,
             "mode": "elastic",
@@ -169,6 +218,14 @@ class ElasticScanBoundSolve(BoundSolve):
                 sum(a.size * a.dtype.itemsize
                     for a in self._ea[:5] + (self._val_src, self._diag_src))
             ),
+            # certificate (predicted) vs runtime (measured, from
+            # solve_timed): the elastic fused-barrier claim, executed
+            "runtime": {
+                **rt,
+                "predicted_macro_steps": M,
+                "predicted_barrier_fusion": cert.get("barrier_fusion"),
+                "predicted_step_fusion": cert.get("step_fusion"),
+            },
         }
 
 
@@ -186,11 +243,20 @@ class ScanBackend(Backend):
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
              interpret=None, mesh=None, slack=0) -> BoundSolve:
+        with obs.span(
+            "backend.bind",
+            cat="backend",
+            backend=self.name,
+            n=exec_plan.n,
+            slack=slack,
+        ):
+            return self._bind(exec_plan, dtype=dtype, slack=slack)
+
+    def _bind(self, exec_plan, *, dtype, slack) -> BoundSolve:
         import jax.numpy as jnp
 
         from repro.solver.executor import plan_arrays
 
-        del steps_per_tile, interpret, mesh  # scan has no tiling or mesh
         assert exec_plan.val_src is not None and exec_plan.diag_src is not None
         if slack > 0:
             from repro.core.elastic import elastic_transform

@@ -37,6 +37,7 @@ from typing import List
 
 import numpy as np
 
+from repro import obs
 from repro.core.schedule import Schedule
 from repro.sparse.csr import CSRMatrix
 
@@ -158,82 +159,102 @@ def compile_plan(
     ``_resolve_width`` for the default.
     """
     n, k = L.n_rows, sched.k
-    row_nnz_off = L.row_nnz() - 1  # off-diagonal count (diag always present)
-    assert (row_nnz_off >= 0).all(), "matrix must have a full diagonal"
-    W = _resolve_width(row_nnz_off, n, width)
-    S = sched.n_supersteps
-    diag_vals = L.diagonal()
+    with obs.span(
+        "inspector.compile_plan", cat="inspector", n=n, k=k
+    ) as sp:
+        row_nnz_off = L.row_nnz() - 1  # off-diag count (diag always present)
+        assert (row_nnz_off >= 0).all(), "matrix must have a full diagonal"
+        W = _resolve_width(row_nnz_off, n, width)
+        S = sched.n_supersteps
+        diag_vals = L.diagonal()
 
-    # -- schedule order: vertices grouped by (superstep, core), chain order
-    # (the same stable lexsort Schedule.chains() uses, minus the dict)
-    order = np.lexsort((sched.rank, sched.pi, sched.sigma))
+        # -- schedule order: vertices grouped by (superstep, core), chain
+        # order (the stable lexsort Schedule.chains() uses, minus the dict)
+        with obs.span("inspector.order", cat="inspector"):
+            order = np.lexsort((sched.rank, sched.pi, sched.sigma))
 
-    # -- virtual-row expansion: vertex v becomes ceil(off_nnz/W) rows ------
-    segs = np.maximum(1, -(-row_nnz_off // W)).astype(np.int64)
-    segs_o = segs[order]
-    vr_v = np.repeat(order, segs_o)  # vertex of each virtual row
-    starts = np.cumsum(segs_o) - segs_o  # first virtual row per vertex
-    vr_g = np.arange(len(vr_v), dtype=np.int64) - np.repeat(starts, segs_o)
-    vr_last = vr_g == segs[vr_v] - 1
+        # -- virtual-row expansion: vertex v becomes ceil(off_nnz/W) rows --
+        with obs.span("inspector.expand", cat="inspector"):
+            segs = np.maximum(1, -(-row_nnz_off // W)).astype(np.int64)
+            segs_o = segs[order]
+            vr_v = np.repeat(order, segs_o)  # vertex of each virtual row
+            starts = np.cumsum(segs_o) - segs_o  # first v-row per vertex
+            vr_g = (
+                np.arange(len(vr_v), dtype=np.int64)
+                - np.repeat(starts, segs_o)
+            )
+            vr_last = vr_g == segs[vr_v] - 1
 
-    # -- chain position of each virtual row within its (superstep, core) --
-    key = sched.sigma[vr_v].astype(np.int64) * k + sched.pi[vr_v]
-    group_len = np.bincount(key, minlength=S * k)  # sorted by construction
-    group_start = np.cumsum(group_len) - group_len
-    t_in_chain = np.arange(len(vr_v), dtype=np.int64) - group_start[key]
+            # chain position of each virtual row within (superstep, core)
+            key = sched.sigma[vr_v].astype(np.int64) * k + sched.pi[vr_v]
+            group_len = np.bincount(key, minlength=S * k)  # sorted already
+            group_start = np.cumsum(group_len) - group_len
+            t_in_chain = (
+                np.arange(len(vr_v), dtype=np.int64) - group_start[key]
+            )
 
-    # superstep step count = max chain length over its k cores
-    chain_len = group_len.reshape(S, k)
-    step_bounds = np.zeros(S + 1, dtype=np.int64)
-    np.cumsum(chain_len.max(axis=1), out=step_bounds[1:])
-    T = int(step_bounds[-1])
+            # superstep step count = max chain length over its k cores
+            chain_len = group_len.reshape(S, k)
+            step_bounds = np.zeros(S + 1, dtype=np.int64)
+            np.cumsum(chain_len.max(axis=1), out=step_bounds[1:])
+            T = int(step_bounds[-1])
 
-    # flat (step, core) slot of every virtual row
-    slot = (step_bounds[sched.sigma[vr_v]] + t_in_chain) * k + sched.pi[vr_v]
+            # flat (step, core) slot of every virtual row
+            slot = (
+                step_bounds[sched.sigma[vr_v]] + t_in_chain
+            ) * k + sched.pi[vr_v]
 
-    # -- row-level tensors: one scatter each ------------------------------
-    row_ids = np.full(T * k, n, dtype=np.int32)
-    row_ids[slot] = vr_v
-    diag = np.ones(T * k, dtype=dtype)
-    diag[slot] = diag_vals[vr_v]
-    accum = np.zeros(T * k, dtype=bool)
-    accum[slot] = ~vr_last
+        # -- row-level tensors: one scatter each --------------------------
+        with obs.span("inspector.row_scatter", cat="inspector"):
+            row_ids = np.full(T * k, n, dtype=np.int32)
+            row_ids[slot] = vr_v
+            diag = np.ones(T * k, dtype=dtype)
+            diag[slot] = diag_vals[vr_v]
+            accum = np.zeros(T * k, dtype=bool)
+            accum[slot] = ~vr_last
 
-    # first diagonal entry id per row (reverse scatter keeps the first)
-    rows_of_entry = L.row_of_entry()
-    off_mask = L.indices != rows_of_entry
-    diag_entry = np.full(n, -1, dtype=np.int64)
-    d_ids = np.nonzero(~off_mask)[0]
-    diag_entry[rows_of_entry[d_ids[::-1]]] = d_ids[::-1]
-    diag_src = np.full(T * k, -1, dtype=np.int32)
-    diag_src[slot] = diag_entry[vr_v]
+            # first diagonal entry id per row (reverse scatter keeps first)
+            rows_of_entry = L.row_of_entry()
+            off_mask = L.indices != rows_of_entry
+            diag_entry = np.full(n, -1, dtype=np.int64)
+            d_ids = np.nonzero(~off_mask)[0]
+            diag_entry[rows_of_entry[d_ids[::-1]]] = d_ids[::-1]
+            diag_src = np.full(T * k, -1, dtype=np.int32)
+            diag_src[slot] = diag_entry[vr_v]
 
-    # -- entry-level tensors: off-diagonal entries, row-major -------------
-    off_entries = np.nonzero(off_mask)[0]  # entry ids grouped by row
-    n_off = np.bincount(
-        rows_of_entry[off_mask], minlength=n
-    ).astype(np.int64)
-    off_start = np.cumsum(n_off) - n_off  # row -> first slot in off_entries
+        # -- entry-level tensors: off-diagonal entries, row-major ---------
+        with obs.span("inspector.entry_scatter", cat="inspector"):
+            off_entries = np.nonzero(off_mask)[0]  # entry ids by row
+            n_off = np.bincount(
+                rows_of_entry[off_mask], minlength=n
+            ).astype(np.int64)
+            off_start = np.cumsum(n_off) - n_off  # row -> first off slot
 
-    # entries taken by virtual row (v, g): off slots [gW, min((g+1)W, n_off))
-    cnt = np.clip(n_off[vr_v] - vr_g * W, 0, W)
-    total = int(cnt.sum())
-    e_start = np.cumsum(cnt) - cnt
-    lane = np.arange(total, dtype=np.int64) - np.repeat(e_start, cnt)
-    src = off_entries[
-        off_start[np.repeat(vr_v, cnt)] + np.repeat(vr_g, cnt) * W + lane
-    ]
-    dest = np.repeat(slot, cnt) * W + lane
+            # virtual row (v, g) takes off slots [gW, min((g+1)W, n_off))
+            cnt = np.clip(n_off[vr_v] - vr_g * W, 0, W)
+            total = int(cnt.sum())
+            e_start = np.cumsum(cnt) - cnt
+            lane = (
+                np.arange(total, dtype=np.int64) - np.repeat(e_start, cnt)
+            )
+            src = off_entries[
+                off_start[np.repeat(vr_v, cnt)]
+                + np.repeat(vr_g, cnt) * W
+                + lane
+            ]
+            dest = np.repeat(slot, cnt) * W + lane
 
-    # padding gathers read x[n] (scratch) -> harmless 0 contribution
-    col_idx = np.full(T * k * W, n, dtype=np.int32)
-    col_idx[dest] = L.indices[src]
-    vals = np.zeros(T * k * W, dtype=dtype)
-    vals[dest] = L.data[src]
-    # int32 matches col_idx and halves the host-side footprint; entry ids
-    # are bounded by nnz << 2^31
-    val_src = np.full(T * k * W, -1, dtype=np.int32)
-    val_src[dest] = src
+            # padding gathers read x[n] (scratch) -> harmless 0 contribution
+            col_idx = np.full(T * k * W, n, dtype=np.int32)
+            col_idx[dest] = L.indices[src]
+            vals = np.zeros(T * k * W, dtype=dtype)
+            vals[dest] = L.data[src]
+            # int32 matches col_idx and halves the host-side footprint;
+            # entry ids are bounded by nnz << 2^31
+            val_src = np.full(T * k * W, -1, dtype=np.int32)
+            val_src[dest] = src
+
+        sp.set(T=T, W=W, supersteps=S)
 
     return ExecPlan(
         n=n,

@@ -374,8 +374,32 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="trace the dry-run with repro.obs and write a Chrome "
+             "trace_event JSON to PATH (sptrsv cells span the "
+             "inspector/backend layers; lowering itself is untraced)",
+    )
     args = ap.parse_args()
 
+    trace_buf = None
+    if args.trace:
+        from repro import obs
+
+        trace_buf = obs.enable()
+    try:
+        _dispatch(args)
+    finally:
+        if trace_buf is not None:
+            from repro import obs
+
+            obs.disable()
+            obs.export_chrome_trace(args.trace, trace_buf)
+            print(f"[trace: {len(trace_buf)} spans -> {args.trace}]",
+                  flush=True)
+
+
+def _dispatch(args):
     if args.all:
         for arch in ARCH_IDS:
             for shape in SHAPES:

@@ -24,6 +24,8 @@ import threading
 from collections import OrderedDict
 from typing import Callable, Hashable, Optional
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -106,17 +108,21 @@ class PlanCache:
             if entry is not None:
                 self._entries.move_to_end(key)
                 self.stats.hits += 1
+                obs.counter_add("cache.hit")
                 return entry, True
-        built = builder()
+        with obs.span("cache.build", cat="cache"):
+            built = builder()
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:  # lost the race; count as a hit
                 self._entries.move_to_end(key)
                 self.stats.hits += 1
+                obs.counter_add("cache.hit")
                 return entry, True
             self.stats.misses += 1
             self._entries[key] = built
             self._evict_locked()
+        obs.counter_add("cache.miss")
         return built, False
 
     def _evict_locked(self) -> None:
@@ -133,6 +139,7 @@ class PlanCache:
             self._entries.pop(key)
             self._drop_width_class_locked(key)
             self.stats.evictions += 1
+            obs.counter_add("cache.evict")
             over -= 1
             if over <= 0:
                 break
@@ -156,6 +163,7 @@ class PlanCache:
         whenever it appears."""
         with self._lock:
             self._pinned.add(key)
+        obs.counter_add("cache.pin")
 
     def unpin(self, key: Hashable) -> None:
         """Drop the eviction exemption (idempotent); the entry itself
@@ -163,6 +171,7 @@ class PlanCache:
         with self._lock:
             self._pinned.discard(key)
             self._evict_locked()
+        obs.counter_add("cache.unpin")
 
     @property
     def pinned(self) -> frozenset:
@@ -198,6 +207,7 @@ class PlanCache:
     def note_numeric_update(self) -> None:
         with self._lock:
             self.stats.numeric_updates += 1
+        obs.counter_add("cache.numeric_update")
 
     def clear(self) -> None:
         with self._lock:

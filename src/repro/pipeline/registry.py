@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Tuple
 
+from repro import obs
 from repro.core import (
     DEFAULT_L,
     Schedule,
@@ -118,7 +119,13 @@ def schedule(
         from repro.autotune.selector import select_schedule
 
         return select_schedule(dag, o)[1]
-    return get_scheduler(strategy)(dag, o)
+    with obs.span(
+        f"inspector.schedule.{strategy}",
+        cat="inspector",
+        n=dag.n,
+        k=o.k,
+    ):
+        return get_scheduler(strategy)(dag, o)
 
 
 @register_scheduler("growlocal")

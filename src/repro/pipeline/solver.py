@@ -35,6 +35,7 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import apply_reordering, compile_plan
 from repro.core.plan import ExecPlan
 from repro.pipeline.cache import PlanCache
@@ -137,6 +138,7 @@ class TriangularSolver:
         steps_per_tile: int = 8,
         interpret: Optional[bool] = None,
         slack: int = 0,
+        timed: bool = False,
     ):
         self.exec_plan = exec_plan
         self.backend = backend
@@ -149,6 +151,11 @@ class TriangularSolver:
         self._steps_per_tile = steps_per_tile
         self._interpret = interpret
         self._slack = slack  # > 0: elastic (macro-step) execution mode
+        # per-step timed execution (observability toggle, NOT part of the
+        # plan identity — flip it any time; results are identical, only
+        # dispatch granularity and telemetry change)
+        self.timed = bool(timed)
+        self.last_step_timings: Optional[list] = None
         self._source_data: Optional[np.ndarray] = None  # set by plan()
         self._selection = None  # autotune Selection, set by plan(auto)
         self.plan_key = None  # concrete plan-cache key, set by plan()
@@ -215,9 +222,7 @@ class TriangularSolver:
         return bool(getattr(self._bound, "supports_grouped", False))
 
     # ---------------------------------------------------------- solving
-    def solve(self, b):
-        """Solve the planned system for ``b``: f[n] or f[n, m] (multi-RHS).
-        Input/output live in the caller's original row ordering."""
+    def _check_b(self, b):
         b = jnp.asarray(b, self.dtype)
         # XLA clamps out-of-range gather indices, so a mis-sized b would
         # silently produce garbage — reject it here.
@@ -225,8 +230,36 @@ class TriangularSolver:
             raise ValueError(
                 f"b must be [n] or [n, m] with n={self.n}; got {b.shape}"
             )
-        x = self._bound.solve(b[self._perm])
-        return x[self._inv]
+        return b
+
+    def solve(self, b):
+        """Solve the planned system for ``b``: f[n] or f[n, m] (multi-RHS).
+        Input/output live in the caller's original row ordering. With the
+        ``timed`` toggle on, routes through :meth:`solve_timed` (per-step
+        device timings land in ``last_step_timings`` and the active trace
+        buffer)."""
+        if self.timed:
+            return self.solve_timed(b)[0]
+        b = self._check_b(b)
+        with obs.span("executor.solve", cat="executor", n=self.n):
+            x = self._bound.solve(b[self._perm])
+            return x[self._inv]
+
+    def solve_timed(self, b):
+        """``solve`` with per-step device timing: returns ``(x, steps)``
+        where ``steps`` holds one JSON-ready dict per superstep (bulk) /
+        macro-step (elastic) at the finest granularity the backend can
+        observe (``BoundSolve.solve_timed``). The last timing list is
+        kept on ``last_step_timings``; per-step spans land in the active
+        trace buffer when tracing is enabled."""
+        b = self._check_b(b)
+        with obs.span(
+            "executor.solve", cat="executor", n=self.n, timed=True
+        ):
+            x, steps = self._bound.solve_timed(b[self._perm])
+            x = x[self._inv]
+        self.last_step_timings = steps
+        return x, steps
 
     __call__ = solve
 
@@ -306,6 +339,7 @@ class TriangularSolver:
             "backend": self.backend,
             "mode": "elastic" if self._slack else "bsp",
             "slack": self._slack,
+            "timed": self.timed,
             "lower": self.lower,
             "n_supersteps": self.n_supersteps,
             "inspector_seconds": self.inspector_seconds,
@@ -347,6 +381,7 @@ class TriangularSolver:
         sched=None,
         tune: bool = False,
         mode: Optional[str] = None,
+        timed: bool = False,
         **opts,
     ) -> "TriangularSolver":
         """Plan a solver for triangular ``a`` (lower, or upper with
@@ -374,7 +409,14 @@ class TriangularSolver:
         resolved config is memoized per sparsity fingerprint (inside
         ``cache`` when given), and the plan is cached under the resolved
         *concrete* key — so repeated auto plans on one pattern skip both
-        selection and scheduling."""
+        selection and scheduling.
+
+        ``timed=True`` turns on per-step timed execution (``repro.obs``):
+        every ``solve`` routes through ``solve_timed`` and records
+        per-superstep / per-macro-step device timings. Deliberately NOT
+        part of the plan identity — it is a mutable observability toggle
+        on the solver (``solver.timed``), so a cache hit returns the same
+        entry with the toggle set to THIS call's value."""
         # normalize once: the registry is case-insensitive, and the raw
         # string enters the plan-cache key ("GrowLocal" vs "growlocal"
         # must not schedule twice); also makes strategy="Auto" work
@@ -458,10 +500,16 @@ class TriangularSolver:
             elif pre_sched is not None:
                 s = pre_sched  # already computed while scoring candidates
             else:
-                dag = dag_from_lower_csr(m0)
-                s = get_scheduler(strategy)(dag, o)
+                with obs.span("inspector.dag", cat="inspector", n=n):
+                    dag = dag_from_lower_csr(m0)
+                with obs.span(
+                    f"inspector.schedule.{strategy}", cat="inspector",
+                    n=n, k=o.k,
+                ):
+                    s = get_scheduler(strategy)(dag, o)
             if o.reorder:
-                m2, s2, _, r = apply_reordering(m0, s)
+                with obs.span("inspector.reorder", cat="inspector", n=n):
+                    m2, s2, _, r = apply_reordering(m0, s)
                 inner = r.perm
             else:
                 m2, s2, inner = m0, s, np.arange(n, dtype=np.int64)
@@ -514,6 +562,7 @@ class TriangularSolver:
             solver = builder()
             if sched is None:  # prebuilt schedules have no cacheable key
                 solver.plan_key = key
+            solver.timed = timed
             return solver
         solver, hit = cache.get_or_build(key, builder)
         # idempotent on hits (the key IS the entry's key); lets callers
@@ -526,6 +575,7 @@ class TriangularSolver:
             solver = solver._with_values(a.data)
             cache.replace(key, solver)
             cache.note_numeric_update()
+        solver.timed = timed
         return solver
 
 

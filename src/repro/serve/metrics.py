@@ -34,24 +34,45 @@ PERCENTILES = (50, 95, 99, 99.9)
 
 
 class LatencyReservoir:
-    """Bounded sample window; percentiles over the most recent ``cap``."""
+    """Bounded sample window; percentiles over the most recent ``cap``.
+
+    Internally thread-safe: ``add`` and ``percentiles_us`` may race from
+    different threads. Without the lock, iterating the deque
+    (``np.fromiter``) while a concurrent ``add`` rotates it past
+    ``maxlen`` raises ``RuntimeError: deque mutated during iteration`` —
+    a real crash under serving load, regression-tested by
+    ``tests/test_obs.py::test_latency_reservoir_threaded``. The lock is
+    a leaf (nothing is called while holding it), so reservoir methods
+    are safe to call under the ``ServeMetrics`` lock."""
 
     def __init__(self, cap: int = 4096):
+        self._lock = threading.Lock()
         self._samples: deque = deque(maxlen=cap)
         self.count = 0  # lifetime, not window
 
     def add(self, seconds: float) -> None:
-        self._samples.append(seconds)
-        self.count += 1
+        with self._lock:
+            self._samples.append(seconds)
+            self.count += 1
 
     def extend(self, seconds_iter) -> None:
-        for s in seconds_iter:
-            self.add(s)
+        # one lock round-trip for the whole batch, not one per sample
+        seconds = list(seconds_iter)
+        with self._lock:
+            self._samples.extend(seconds)
+            self.count += len(seconds)
+
+    def samples(self) -> list:
+        """A consistent copy of the current window (the accessor
+        ``ServeMetrics.snapshot`` pools global percentiles from —
+        never iterate ``_samples`` directly)."""
+        with self._lock:
+            return list(self._samples)
 
     def percentiles_us(self) -> Dict[str, float]:
         """{"p50": ..., ..., "p99.9": ...} in microseconds (NaN-free:
         empty reservoirs report 0.0 so JSON stays parseable)."""
-        return _percentiles_us(np.fromiter(self._samples, dtype=np.float64))
+        return _percentiles_us(np.asarray(self.samples(), dtype=np.float64))
 
 
 def _percentiles_us(arr: np.ndarray) -> Dict[str, float]:
@@ -240,8 +261,8 @@ class ServeMetrics:
                 tot_rej += p.rejected
                 tot_batches += p.batches
                 hist.update(p.batch_hist)
-                all_e2e.extend(p.e2e._samples)
-                all_queue.extend(p.queue_wait._samples)
+                all_e2e.extend(p.e2e.samples())
+                all_queue.extend(p.queue_wait.samples())
                 per_pattern[fp] = {
                     "submitted": p.submitted,
                     "completed": p.completed,

@@ -51,6 +51,7 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
+from repro import obs
 from repro.pipeline import GroupBank, PlanCache, TriangularSolver, grouped_solve
 from repro.serve.batcher import MicroBatcher, normalize_max_batch, pad_width
 from repro.serve.metrics import ServeMetrics, pretty
@@ -579,7 +580,10 @@ class SolveService:
                 B = np.concatenate(
                     [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
                 )
-            X = np.asarray(solver.solve(B))
+            with obs.span(
+                "serve.microbatch", cat="serve", size=m, width=w
+            ):
+                X = np.asarray(solver.solve(B))
             t1 = time.perf_counter()
             for j, r in enumerate(reqs):
                 r.ticket.batch_width = w
@@ -644,7 +648,14 @@ class SolveService:
                     [B, np.zeros((B.shape[0], w - m), B.dtype)], axis=1
                 )
                 keys = keys + [keys[0]] * (w - m)  # padding lanes
-            X = np.asarray(bank.solve(keys, B))
+            with obs.span(
+                "serve.grouped_batch",
+                cat="serve",
+                size=m,
+                width=w,
+                patterns=len(fps_touched),
+            ):
+                X = np.asarray(bank.solve(keys, B))
             t1 = time.perf_counter()
             for j, r in enumerate(reqs):
                 r.ticket.batch_width = w
@@ -867,6 +878,11 @@ class SolveService:
                     }
                     for fp, vp in patterns
                 },
+                # repro.obs cross-layer tracing aggregate — one merged
+                # telemetry document per service: serve metrics above,
+                # span/counter rollup here ({"enabled": False} when
+                # tracing is off)
+                "obs": obs.summary(),
             },
         )
 

@@ -68,6 +68,7 @@ from typing import Callable, Dict, Hashable, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.pipeline import GroupBank
 from repro.serve.batcher import AdmissionQueue, pad_width
 from repro.serve.metrics import ServeMetrics
@@ -284,7 +285,13 @@ class SlotEngine:
             for lane in range(width)
         ]
         try:
-            X = self.bank.solve_resident(keys, B)
+            with obs.span(
+                "serve.slot_pass",
+                cat="serve",
+                width=width,
+                occupied=len(occupied),
+            ):
+                X = self.bank.solve_resident(keys, B)
             xs = {
                 lane: np.asarray(cls.extract_lane(X, lane))
                 for lane in occupied

@@ -25,13 +25,15 @@ exact same op sequence.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
-from typing import NamedTuple
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.plan import ExecPlan
 
 
@@ -67,16 +69,19 @@ def _step_single(x, acc, rows, cols, v, d, a, b_pad):
     per step — the foundation of the bitwise elastic == bulk guarantee
     (tests/test_elastic.py).
     """
-    partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
-    acc = acc + partial_sum
-    xv = (b_pad[rows] - acc) / d
-    # finishing lanes write x and reset their accumulator
-    write = jnp.where(a, x[rows], xv)
-    # NOTE: padded lanes share the scratch row id n -> indices are not
-    # unique; plain scatter keeps them well-defined (they all write junk
-    # to the scratch slot).
-    x = x.at[rows].set(write)
-    acc = jnp.where(a, acc, 0.0)
+    # named_scope tags the emitted HLO (zero runtime cost), so a
+    # jax.profiler device trace carries plan-step names
+    with jax.named_scope("sptrsv_step"):
+        partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
+        acc = acc + partial_sum
+        xv = (b_pad[rows] - acc) / d
+        # finishing lanes write x and reset their accumulator
+        write = jnp.where(a, x[rows], xv)
+        # NOTE: padded lanes share the scratch row id n -> indices are not
+        # unique; plain scatter keeps them well-defined (they all write
+        # junk to the scratch slot).
+        x = x.at[rows].set(write)
+        acc = jnp.where(a, acc, 0.0)
     return x, acc
 
 
@@ -265,11 +270,12 @@ def solve_resident(bank: BankTensors, lane_idx, B_res) -> jax.Array:
 def _step_mrhs(x, acc, rows, cols, v, d, a, b_pad):
     """Multi-RHS twin of ``_step_single`` (value lanes widen to m);
     shared by the bulk scan and the elastic macro-step body."""
-    acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
-    xv = (b_pad[rows] - acc) / d[:, None]
-    write = jnp.where(a[:, None], x[rows], xv)
-    x = x.at[rows].set(write)
-    acc = jnp.where(a[:, None], acc, 0.0)
+    with jax.named_scope("sptrsv_step_mrhs"):
+        acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
+        xv = (b_pad[rows] - acc) / d[:, None]
+        write = jnp.where(a[:, None], x[rows], xv)
+        x = x.at[rows].set(write)
+        acc = jnp.where(a[:, None], acc, 0.0)
     return x, acc
 
 
@@ -422,6 +428,122 @@ def solve_with_elastic(ea: ElasticArrays, b: jax.Array) -> jax.Array:
     b_pad = jnp.concatenate([b, pad])
     solver = _solve_elastic if b.ndim == 1 else _solve_elastic_mrhs
     return solver(ea.row_ids, ea.col_idx, ea.vals, ea.diag, ea.accum, b_pad, ea.n)
+
+
+# ---------------------------------------------------------- timed solves
+# Opt-in per-step device timing (``TriangularSolver.plan(..., timed=True)``
+# / ``BoundSolve.solve_timed``): the plan traversal is broken at its
+# natural boundaries — superstep bounds for the bulk scan, macro-step
+# windows for elastic — and each segment runs as its own jitted call,
+# host-timed around ``block_until_ready``. Results stay numerically
+# identical to the fused scans (the segment carry replays the same step
+# bodies in the same order); only dispatch granularity changes, which is
+# exactly what makes the per-segment wall-clock observable. Compiled
+# variants are bounded: one per distinct superstep length (bulk) and ONE
+# total for elastic (every window is [slack, ...]-shaped).
+
+@jax.jit
+def _solve_segment(rows, cols, v, d, a, b_pad, x, acc):
+    """Run one contiguous run of plan steps on an existing (x, acc)
+    carry. Serves both timed paths: a bulk superstep slice (rows
+    int32[t, k]) and one elastic macro window (rows int32[slack, k]).
+    Single- vs multi-RHS is resolved statically from the carry rank."""
+    body = _step_single if x.ndim == 1 else _step_mrhs
+
+    def step(carry, inp):
+        return body(*carry, *inp, b_pad), None
+
+    (x, acc), _ = jax.lax.scan(step, (x, acc), (rows, cols, v, d, a))
+    return x, acc
+
+
+def _timed_carry(b, vals_dtype, n, k):
+    """Shared setup for the timed paths: padded rhs + zero carry."""
+    b = jnp.asarray(b).astype(vals_dtype)
+    pad = jnp.zeros((1, *b.shape[1:]), vals_dtype)
+    b_pad = jnp.concatenate([b, pad])
+    if b.ndim == 1:
+        x = jnp.zeros(n + 1, b_pad.dtype)
+        acc = jnp.zeros(k, b_pad.dtype)
+    else:
+        m = b.shape[1]
+        x = jnp.zeros((n + 1, m), b_pad.dtype)
+        acc = jnp.zeros((k, m), b_pad.dtype)
+    return b_pad, x, acc
+
+
+def solve_with_plan_timed(
+    pa: PlanArrays, b: jax.Array
+) -> Tuple[jax.Array, List[dict]]:
+    """``solve_with_plan`` with per-superstep device timing: one jitted
+    segment per superstep, synchronized and host-timed. Returns
+    ``(x, steps)`` where each entry is
+    ``{"superstep", "n_steps", "us"}``; an ``executor.superstep`` span
+    lands in the active trace buffer per segment when tracing is on."""
+    k = int(pa.row_ids.shape[1])
+    b_pad, x, acc = _timed_carry(b, pa.vals.dtype, pa.n, k)
+    bounds = pa.step_bounds
+    steps: List[dict] = []
+    for s in range(len(bounds) - 1):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        if hi == lo:
+            continue
+        with obs.span(
+            "executor.superstep", cat="executor", superstep=s, steps=hi - lo
+        ):
+            t0 = time.perf_counter_ns()
+            x, acc = _solve_segment(
+                pa.row_ids[lo:hi],
+                pa.col_idx[lo:hi],
+                pa.vals[lo:hi],
+                pa.diag[lo:hi],
+                pa.accum[lo:hi],
+                b_pad,
+                x,
+                acc,
+            )
+            x.block_until_ready()
+            dur = time.perf_counter_ns() - t0
+        steps.append(
+            {"superstep": s, "n_steps": hi - lo, "us": round(dur / 1e3, 2)}
+        )
+    return x[:pa.n], steps
+
+
+def solve_with_elastic_timed(
+    ea: ElasticArrays, b: jax.Array
+) -> Tuple[jax.Array, List[dict]]:
+    """``solve_with_elastic`` with per-macro-step device timing. Every
+    window shares the [slack, ...] shape, so the whole loop compiles ONE
+    ``_solve_segment`` variant. Returns ``(x, steps)`` with one
+    ``{"macro_step", "n_steps", "us"}`` entry (and one
+    ``executor.macro_step`` span when tracing) per executed macro-step —
+    the runtime side of the elastic barrier-fusion certificate."""
+    k = int(ea.row_ids.shape[2])
+    b_pad, x, acc = _timed_carry(b, ea.vals.dtype, ea.n, k)
+    M = int(ea.row_ids.shape[0])
+    steps: List[dict] = []
+    for m in range(M):
+        with obs.span(
+            "executor.macro_step", cat="executor", macro=m, slack=ea.slack
+        ):
+            t0 = time.perf_counter_ns()
+            x, acc = _solve_segment(
+                ea.row_ids[m],
+                ea.col_idx[m],
+                ea.vals[m],
+                ea.diag[m],
+                ea.accum[m],
+                b_pad,
+                x,
+                acc,
+            )
+            x.block_until_ready()
+            dur = time.perf_counter_ns() - t0
+        steps.append(
+            {"macro_step": m, "n_steps": ea.slack, "us": round(dur / 1e3, 2)}
+        )
+    return x[:ea.n], steps
 
 
 def make_solver(plan: ExecPlan, dtype=jnp.float32):
