@@ -24,6 +24,9 @@ groups them into single vmapped solves; acceptance bar: >= 1.5x).
 over worker counts per mix (the n_workers x mix study): acceptance is
 that multi-worker throughput never drops below 0.7x the single-worker
 run (workers own distinct routes; more workers must not serialize).
+The sweep also runs a backend axis: the hot mix served through the
+row-partitioned distributed backend (``shard="rows"``, reported as
+``serve.sweep.hot.rows``) on a forced multi-device CPU mesh.
 
 ``--mode continuous`` runs the continuous-batching study instead: the
 hot and width mixes replayed OPEN-loop (fixed offered load) against
@@ -107,6 +110,7 @@ def _measure(
     backend: str,
     validate: bool,
     n_adversarial: int = 12,
+    plan_extra: dict = None,
 ) -> dict:
     with SolveService(
         max_batch=max_batch,
@@ -116,6 +120,7 @@ def _measure(
         cache=cache,
         strategy=strategy,
         backend=backend,
+        **(plan_extra or {}),
     ) as svc:
         patterns, sampler = patterns_for_mix(
             svc, mix, n_adversarial=n_adversarial, seed=3
@@ -417,6 +422,52 @@ def run_worker_sweep(
         "worker-sweep acceptance (multi-worker >= 0.7x single-worker): "
         f"{'PASS' if ok else 'MISS'}"
     )
+
+    # the sharded backend axis: the hot mix once more through the row-
+    # partitioned distributed backend (shard="rows"), so the sweep also
+    # covers the serving cost of halo-exchange solves. Needs a multi-
+    # device process view — main() forces one via XLA_FLAGS when the
+    # sweep is requested, but respects a pre-set environment.
+    import jax
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        print(
+            "rows backend axis skipped: single-device process "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+        return sweep
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    nw = workers_list[0]
+    print(f"\n# backend axis — shard='rows' on a {n_dev}-device mesh "
+          f"(n_workers={nw})")
+    for mix in ("hot",):
+        rep = _measure(
+            mix,
+            cache=PlanCache(),  # distinct binding: never share plans
+            max_batch=o["max_batch"],
+            max_wait_us=o["max_wait_us"],
+            n_clients=o["n_clients"],
+            requests_per_client=o["requests_per_client"],
+            n_workers=nw,
+            width_class=False,
+            strategy=o["strategy"],
+            backend="distributed",
+            validate=validate,
+            plan_extra=dict(mesh=mesh, shard="rows"),
+        )
+        sps = rep["solves_per_sec"]
+        base = sweep[mix][nw]
+        print(f"{mix + '@rows':12s} {sps:10.1f}  "
+              f"({sps / max(base, 1e-9):.2f}x of scan)")
+        sweep[f"{mix}@rows"] = {nw: sps}
+        csv_rows.append(
+            (
+                f"serve.sweep.{mix}.rows",
+                round(1e6 / max(sps, 1e-9), 1),
+                round(sps / max(base, 1e-9), 3),
+            )
+        )
     return sweep
 
 
@@ -493,6 +544,15 @@ def main(argv=None) -> None:
              "plan/cache/backend layers underneath)",
     )
     args = ap.parse_args(argv)
+    if args.sweep_workers:
+        # the sweep's shard="rows" backend axis needs a multi-device
+        # process view; must land before jax initializes its CPU client
+        # (respects an explicitly pre-set environment)
+        import os
+
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+        )
     trace_buf = None
     if args.trace:
         from repro import obs

@@ -34,3 +34,24 @@ def run(csv_rows):
         csv_rows.append((f"t76.k{k}.geomean_speedup", round(geomean(rows[k]), 3), ""))
     print("geomean             " + "       " + " ".join(
         f"{geomean(rows[k]):6.2f}" for k in CORES))
+
+    # the second scaling axis: row-sharding one schedule across devices
+    # (core.rowshard, host-only here) — halo traffic vs the all-gather
+    # baseline at 4 shards, on the same corpus
+    from repro.core import apply_reordering, compile_plan, partition_plan
+    from repro.pipeline import schedule as _sched
+
+    print("\n# row partition at 4 shards — halo_ratio "
+          "(halo values / all_gather values per solve)")
+    ratios = []
+    for mname, L in dataset("suitesparse") + dataset("narrow_band"):
+        dag = dag_from_lower_csr(L)
+        s = _sched(dag, K_CORES, strategy="growlocal")
+        L2, s2, _, _ = apply_reordering(L, s)
+        rsp = partition_plan(compile_plan(L2, s2), 4)
+        r = rsp.comm_stats()["halo_ratio"]
+        ratios.append(r)
+        print(f"{mname:20s} halo_ratio {r:8.4f}")
+    csv_rows.append(
+        ("t76.rows4.halo_ratio", round(geomean(ratios), 5), "geomean")
+    )

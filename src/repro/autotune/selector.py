@@ -63,7 +63,10 @@ selection entirely and resolve straight to a concrete plan-cache key),
 else in a module-level table. With ``tune=True`` it additionally *times*
 the shortlisted compiled plans on the real backend (measured trials, like
 "Elasticity in Parallel Sparse Triangular Solve" adapts execution mode to
-the instance) and lets wall-clock override the model.
+the instance) and lets wall-clock override the model; when elastic is
+allowed, the winner is further swept over the small ``SLACK_GRID`` of
+staleness windows so the slack too is clock-picked (memoized per
+fingerprint with the rest of the selection).
 """
 from __future__ import annotations
 
@@ -106,6 +109,9 @@ class Selection:
     tuned: bool = False
     # (strategy, median solve seconds) per candidate when tune=True
     timings: Optional[Tuple[Tuple[str, float], ...]] = None
+    # (slack, median solve seconds) per swept staleness window on the
+    # clock winner when tune=True ran with elastic allowed
+    slack_timings: Optional[Tuple[Tuple[int, float], ...]] = None
 
     def as_dict(self) -> dict:
         return {
@@ -116,6 +122,10 @@ class Selection:
             "candidates": [(c.strategy, c.cost) for c in self.candidates],
             "tuned": self.tuned,
             "timings": None if self.timings is None else list(self.timings),
+            "slack_timings": (
+                None if self.slack_timings is None
+                else list(self.slack_timings)
+            ),
         }
 
 
@@ -276,6 +286,7 @@ def _binding_key(plan_kwargs: Optional[dict]) -> tuple:
         steps_per_tile=pk.get("steps_per_tile", 8),
         interpret=pk.get("interpret"),
         mesh=pk.get("mesh"),
+        shard=pk.get("shard", "model"),
     )
 
 
@@ -361,7 +372,8 @@ def resolve_auto_full(
     winner_solver = None
     if tune:
         sel, winner_solver = _timed_refine(
-            a, sel, lower=lower, plan_kwargs=plan_kwargs
+            a, sel, lower=lower, plan_kwargs=plan_kwargs,
+            allow_elastic=allow_elastic,
         )
         winning_sched = None
 
@@ -372,6 +384,14 @@ def resolve_auto_full(
     return sel, winning_sched, winner_solver
 
 
+# tune=True slack grid: the elastic staleness windows measured trials
+# sweep on the winning strategy (plus slack=0, bulk-synchronous, and the
+# model rule's pick when it differs). Small on purpose — each point is a
+# compile + timed solves; the tuned pick is memoized per fingerprint via
+# the selection memo, so the sweep runs once per pattern.
+SLACK_GRID = (4, 8, 16)
+
+
 def _timed_refine(
     a: CSRMatrix,
     sel: Selection,
@@ -379,6 +399,7 @@ def _timed_refine(
     lower: bool,
     plan_kwargs: Optional[dict],
     reps: int = 3,
+    allow_elastic: bool = False,
 ) -> Tuple[Selection, object]:
     """Measured-trial mode: compile every shortlisted candidate through
     the real pipeline and let the median wall-clock of an actual solve
@@ -386,7 +407,15 @@ def _timed_refine(
     plans never pollute (or evict hot entries from) the caller's cache,
     and the winner solver is still private when the tuned Selection is
     recorded on it, so no published object is ever mutated. The winner is
-    returned for ``plan()`` to insert under its concrete key."""
+    returned for ``plan()`` to insert under its concrete key.
+
+    With ``allow_elastic=True`` the winning strategy is additionally
+    swept over ``SLACK_GRID`` (and slack=0): the model's step-granular
+    elastic rule picks a fusion ratio, but the best staleness window is
+    an instance property only the clock can settle. The swept points
+    ride the Selection's ``slack_timings`` (``timings`` stays one row
+    per shortlisted strategy), and the tuned options carry whichever
+    slack won."""
     import time
 
     from repro.pipeline.cache import PlanCache
@@ -398,16 +427,14 @@ def _timed_refine(
     kw["cache"] = PlanCache()  # private to this selection
     rng = np.random.default_rng(0)
     b = rng.standard_normal(a.n_rows)
-    timings = []
-    trial = {}  # strategy -> solver
-    for c in sel.candidates:
+
+    def _time_plan(label, strategy, options):
         with obs.span(
-            f"autotune.trial.{c.strategy}", cat="autotune", reps=reps
+            f"autotune.trial.{label}", cat="autotune", reps=reps
         ) as tr_sp:
             solver = TriangularSolver.plan(
-                a, strategy=c.strategy, options=c.options, lower=lower, **kw
+                a, strategy=strategy, options=options, lower=lower, **kw
             )
-            trial[c.strategy] = solver
             solver.solve(b)  # compile + warm up
             ts = []
             for _ in range(reps):
@@ -416,17 +443,48 @@ def _timed_refine(
                 ts.append(time.perf_counter() - t0)
             median = float(np.median(ts))
             tr_sp.set(median_us=round(median * 1e6, 1))
+        return solver, median
+
+    timings = []
+    trial = {}  # strategy -> solver
+    for c in sel.candidates:
+        solver, median = _time_plan(c.strategy, c.strategy, c.options)
+        trial[c.strategy] = solver
         timings.append((c.strategy, median))
     t_of = dict(timings)
     winner = min(sel.candidates, key=lambda c: t_of[c.strategy])
+    win_options = winner.options
+    winner_solver = trial[winner.strategy]
+
+    slack_timings = None
+    if allow_elastic:
+        # sweep the slack dimension on the clock winner; the point the
+        # model already picked (win_options.slack) reuses its timing
+        base_slack = win_options.slack
+        best = (t_of[winner.strategy], base_slack, winner_solver)
+        slack_rows = [(base_slack, best[0])]
+        for s in sorted({0, *SLACK_GRID} - {base_slack}):
+            solver_s, median = _time_plan(
+                f"{winner.strategy}.slack{s}",
+                winner.strategy,
+                win_options.replace(slack=s),
+            )
+            slack_rows.append((s, median))
+            if median < best[0]:
+                best = (median, s, solver_s)
+        if best[1] != base_slack:
+            win_options = win_options.replace(slack=best[1])
+            winner_solver = best[2]
+        slack_timings = tuple(sorted(slack_rows))
+
     tuned = dataclasses.replace(
         sel,
         strategy=winner.strategy,
-        options=winner.options,
+        options=win_options,
         cost=winner.cost,
         tuned=True,
         timings=tuple(timings),
+        slack_timings=slack_timings,
     )
-    winner_solver = trial[winner.strategy]
     winner_solver._selection = tuned  # still private — safe to record
     return tuned, winner_solver

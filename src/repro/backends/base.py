@@ -255,6 +255,7 @@ class Backend(abc.ABC):
         interpret=None,
         mesh=None,
         slack: int = 0,
+        shard: str = "model",
     ) -> BoundSolve:
         """Transfer ``exec_plan``'s tensors and return a ``BoundSolve``.
         Irrelevant parameters are accepted and ignored so callers can
@@ -263,7 +264,13 @@ class Backend(abc.ABC):
         ``slack > 0`` requests ``mode="elastic"`` (bounded-slack
         macro-step execution, see ``core.elastic``); backends that do
         not advertise the ``"elastic"`` capability must raise a clear
-        error rather than silently fall back to bulk-synchronous."""
+        error rather than silently fall back to bulk-synchronous.
+
+        ``shard`` selects the mesh decomposition for multi-device
+        backends: ``"model"`` (default — k schedule cores over the
+        model axis) or ``"rows"`` (row partition + halo exchange,
+        capability ``"shard-rows"``). Backends that do not advertise
+        the requested mode must raise, not silently rebind."""
 
     def requires(self) -> Tuple[str, ...]:
         """Names of binding params this backend cannot run without
@@ -281,5 +288,8 @@ class Backend(abc.ABC):
         persistent device-resident RHS slots on the stacked bank
         (``blank_rhs``/``insert_lane``/``extract_lane``/
         ``solve_resident``; the continuous-batching serve engine,
-        ``repro.serve.slots``, requires it)."""
+        ``repro.serve.slots``, requires it); ``"shard-rows"`` —
+        ``bind(shard="rows")`` row-partitions one plan across the
+        mesh's ``model`` axis with halo exchange instead of per-core
+        sharding (``core.rowshard`` / ``solver.rowsharded``)."""
         return ()

@@ -206,7 +206,13 @@ class PallasBackend(Backend):
         return ("elastic",)
 
     def bind(self, exec_plan, *, dtype=np.float32, steps_per_tile=8,
-             interpret=None, mesh=None, slack=0) -> BoundSolve:
+             interpret=None, mesh=None, slack=0,
+             shard="model") -> BoundSolve:
+        if shard != "model":
+            raise ValueError(
+                f"backend='pallas' does not support shard={shard!r} "
+                "(no 'shard-rows' capability); use backend='distributed'"
+            )
         with obs.span(
             "backend.bind",
             cat="backend",

@@ -35,6 +35,7 @@ from repro.core.growlocal import grow_local
 from repro.core.hdagg import hdagg_schedule
 from repro.core.plan import ExecPlan, compile_plan
 from repro.core.reorder import Reordering, apply_reordering, schedule_order
+from repro.core.rowshard import HaloRound, RowShardPlan, partition_plan
 from repro.core.schedule import (
     DEFAULT_L,
     DEFAULT_L_STEP,
@@ -85,4 +86,7 @@ __all__ = [
     "schedule_step_count",
     "step_cost",
     "elastic_cost",
+    "partition_plan",
+    "RowShardPlan",
+    "HaloRound",
 ]

@@ -25,7 +25,11 @@ def sptrsv_ref(row_ids, col_idx, vals, diag, accum, b_pad):
     def step(carry, inp):
         x, acc = carry
         rows, cols, v, d, a = inp
-        acc = acc + jnp.einsum("kw,kw->k", v, x[cols])
+        # fixed left-to-right lane reduction, matching the scan executor's
+        # _step_single exactly — elementwise IEEE ops per lane keep the
+        # oracle bitwise shape-independent (see solver/executor.py)
+        for w in range(v.shape[1]):
+            acc = acc + v[:, w] * x[cols[:, w]]
         xv = (b_pad[rows] - acc) / d
         x = x.at[rows].set(jnp.where(a, x[rows], xv))
         acc = jnp.where(a, acc, 0.0)

@@ -307,9 +307,13 @@ def _save(result: dict, tag: str, save: bool):
 # the paper's own workload as dry-run cells
 # ---------------------------------------------------------------------------
 SPTRSV_SHAPES = {
-    # (n, kind, params, batch): batch = #RHS sharded over 'data'
+    # (n, kind, params, batch): batch = #RHS sharded over 'data';
+    # shard = mesh decomposition ("model" all_gather | "rows" halo ring)
     "solve_er100k": dict(n=100_000, kind="er", p=5e-5, batch=16),
     "solve_nb100k": dict(n=100_000, kind="nb", p=0.14, band=10.0, batch=16),
+    "solve_nb100k_rows": dict(
+        n=100_000, kind="nb", p=0.14, band=10.0, batch=16, shard="rows"
+    ),
 }
 
 
@@ -334,13 +338,26 @@ def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
     # come from the binding that production would execute —
     # BoundSolve.describe() (device bytes, padded plan geometry, mesh)
     # rather than ad-hoc locals recomputed here
+    shard = spec.get("shard", "model")
     solver = TriangularSolver.plan(
-        L, strategy="growlocal", k=k, backend="distributed", mesh=mesh
+        L, strategy="growlocal", k=k, backend="distributed", mesh=mesh,
+        shard=shard,
     )
-    dspec = dist_plan_spec(solver.exec_plan, batch=spec["batch"])
     try:
         with mesh:
-            lowered = lower_distributed_solve(dspec, mesh)
+            if shard == "rows":
+                from repro.core import partition_plan
+                from repro.solver.rowsharded import lower_rowsharded_solve
+
+                rsp = partition_plan(solver.exec_plan, k)
+                lowered = lower_rowsharded_solve(
+                    rsp, mesh, batch=spec["batch"]
+                )
+            else:
+                dspec = dist_plan_spec(
+                    solver.exec_plan, batch=spec["batch"]
+                )
+                lowered = lower_distributed_solve(dspec, mesh)
             compiled = lowered.compile()
     except Exception as e:  # noqa: BLE001
         result = {"cell": tag, "status": "ERROR",
@@ -352,18 +369,44 @@ def run_sptrsv_cell(shape_name: str, *, multi_pod: bool = False,
     terms = roofline_terms(compiled, hlo, chips)
     mem_d = _memory_dict(compiled)
     info = solver.info()
+    binding = info["binding"]
+    # comm fields are .get-guarded: only distributed bindings publish an
+    # exchange dict, and only shard="rows" carries the halo keys
+    ex = binding.get("exchange") or {}
     result = {
         "cell": tag, "status": "OK", "mesh": dict(mesh.shape), "chips": chips,
         "compile_s": round(time.time() - t0, 1),
         "roofline": terms,
         "memory_analysis": mem_d,
         "supersteps": solver.n_supersteps,
+        "shard": binding.get("shard", "model"),
+        "comm": {
+            "mode": ex.get("mode"),
+            "exchange_rounds": ex.get("rounds"),
+            "comm_values_per_solve": ex.get("comm_values_per_solve"),
+            "comm_bytes_per_solve": ex.get("comm_bytes_per_solve"),
+            "halo_bytes_per_solve": ex.get("halo_bytes_per_solve"),
+            "allgather_bytes": ex.get("allgather_bytes"),
+            "halo_ratio": ex.get("halo_ratio"),
+        },
         "plan": info["plan"],
-        "binding": info["binding"],
+        "binding": binding,
         "nnz": L.nnz,
         # useful flops: 2 per off-diagonal nnz + 1 divide per row
         "model_flops": float(2 * (L.nnz - L.n_rows) + L.n_rows) * spec["batch"],
     }
+    if ex:
+        print(
+            f"    comm[{binding.get('shard', 'model')}]: "
+            f"mode={ex.get('mode')} rounds={ex.get('rounds')} "
+            f"bytes/solve={ex.get('comm_bytes_per_solve')}"
+            + (
+                f" halo_ratio={ex['halo_ratio']:.4f}"
+                if "halo_ratio" in ex
+                else ""
+            ),
+            flush=True,
+        )
     _save(result, tag, save)
     return result
 

@@ -63,7 +63,8 @@ def mesh_fingerprint(mesh) -> tuple | None:
 
 
 def binding_fingerprint(
-    *, backend, dtype, width, steps_per_tile, interpret, mesh, slack=0
+    *, backend, dtype, width, steps_per_tile, interpret, mesh, slack=0,
+    shard="model",
 ) -> tuple:
     """The backend-binding part of a plan's identity — everything beyond
     (pattern, strategy, options, orientation) that changes the compiled
@@ -71,7 +72,10 @@ def binding_fingerprint(
     autotuner's tune-memo key so the two can never drift apart.
     ``slack > 0`` marks an elastic (macro-step) binding — a different
     compiled graph from the bulk-synchronous one, so it must key (and
-    split width classes) even though the plan tensors match."""
+    split width classes) even though the plan tensors match. ``shard``
+    keys the mesh decomposition the same way: ``"rows"`` row-partitions
+    the plan across the mesh (``core.rowshard``), a completely different
+    sharded graph from the default ``"model"`` core sharding."""
     return (
         backend,
         np.dtype(dtype).str,
@@ -80,6 +84,7 @@ def binding_fingerprint(
         interpret,
         mesh_fingerprint(mesh),
         slack,
+        shard,
     )
 
 
@@ -138,6 +143,7 @@ class TriangularSolver:
         steps_per_tile: int = 8,
         interpret: Optional[bool] = None,
         slack: int = 0,
+        shard: str = "model",
         timed: bool = False,
     ):
         self.exec_plan = exec_plan
@@ -151,6 +157,7 @@ class TriangularSolver:
         self._steps_per_tile = steps_per_tile
         self._interpret = interpret
         self._slack = slack  # > 0: elastic (macro-step) execution mode
+        self._shard = shard  # mesh decomposition ("model" | "rows")
         # per-step timed execution (observability toggle, NOT part of the
         # plan identity — flip it any time; results are identical, only
         # dispatch granularity and telemetry change)
@@ -180,6 +187,7 @@ class TriangularSolver:
             interpret=self._interpret,
             mesh=self._mesh,
             slack=self._slack,
+            shard=self._shard,
         )
 
     @property
@@ -213,6 +221,7 @@ class TriangularSolver:
             interpret=self._interpret,
             mesh=self._mesh,
             slack=self._slack,
+            shard=self._shard,
         )
 
     @property
@@ -339,6 +348,7 @@ class TriangularSolver:
             "backend": self.backend,
             "mode": "elastic" if self._slack else "bsp",
             "slack": self._slack,
+            "shard": self._shard,
             "timed": self.timed,
             "lower": self.lower,
             "n_supersteps": self.n_supersteps,
@@ -381,6 +391,7 @@ class TriangularSolver:
         sched=None,
         tune: bool = False,
         mode: Optional[str] = None,
+        shard: str = "model",
         timed: bool = False,
         **opts,
     ) -> "TriangularSolver":
@@ -399,6 +410,13 @@ class TriangularSolver:
         from ``slack=...`` (a ``ScheduleOptions`` knob) or the calibrated
         ``core.DEFAULT_SLACK``; passing ``slack > 0`` alone also enables
         elastic. The backend must advertise the ``"elastic"`` capability.
+
+        ``shard`` selects the mesh decomposition for distributed
+        backends: ``"model"`` (default — lanes sharded, x replicated via
+        all-gather) or ``"rows"`` — the plan is row-partitioned across
+        the mesh's ``"model"`` axis (``core.rowshard``) with per-superstep
+        halo exchange instead of O(n) all-gathers. Requires the backend
+        to advertise ``"shard-rows"``.
 
         ``strategy="auto"`` lets the autotuner choose: DAG features ->
         rule-based shortlist -> §2.2 cost model (``repro.autotune``); with
@@ -454,6 +472,11 @@ class TriangularSolver:
                 f"backend {backend!r} does not support mode='elastic' "
                 f"(requested slack={o.slack}, no 'elastic' capability)"
             )
+        if shard != "model" and f"shard-{shard}" not in backend_caps:
+            raise ValueError(
+                f"backend {backend!r} does not support shard={shard!r} "
+                f"(no 'shard-{shard}' capability)"
+            )
         # the selector may only turn elastic ON when the binding can run
         # it and the caller did not force bulk-synchronous
         elastic_ok = mode != "bsp" and "elastic" in backend_caps
@@ -476,7 +499,7 @@ class TriangularSolver:
                 plan_kwargs=dict(
                     backend=backend, dtype=dtype, width=width,
                     mesh=mesh, steps_per_tile=steps_per_tile,
-                    interpret=interpret,
+                    interpret=interpret, shard=shard,
                 ),
             )
             strategy, o = selection.strategy, selection.options
@@ -487,7 +510,7 @@ class TriangularSolver:
         key = (fp, strategy, o, lower) + binding_fingerprint(
             backend=backend, dtype=dtype, width=width,
             steps_per_tile=steps_per_tile, interpret=interpret, mesh=mesh,
-            slack=o.slack,
+            slack=o.slack, shard=shard,
         )
 
         def build() -> "TriangularSolver":
@@ -546,6 +569,7 @@ class TriangularSolver:
                 steps_per_tile=steps_per_tile,
                 interpret=interpret,
                 slack=o.slack,
+                shard=shard,
             )
             solver._source_data = np.array(a.data)
             # selection is recorded at build time only — cached solvers are

@@ -45,9 +45,19 @@ class DistPlanSpec:
     step_bounds: tuple  # len S+1
     batch: int  # number of RHS (SpTRSM); sharded over 'data'
     dtype: np.dtype = np.dtype(np.float32)
+    # plan-step indices of the barriers actually executed (len F+1,
+    # subset of step_bounds). None -> one barrier per superstep. Set
+    # from the elastic fused-run certificate (core.elastic) to fuse
+    # greedy superstep runs into single all-gather rounds: a fused run
+    # has no cross-core reads of values written inside it, so deferring
+    # the exchange to the run boundary is exactly as correct as the
+    # per-superstep barrier (tests/test_rowshard_distributed.py).
+    exchange_steps: tuple = None
 
 
-def dist_plan_spec(plan: ExecPlan, batch: int = 1, dtype=np.float32) -> DistPlanSpec:
+def dist_plan_spec(
+    plan: ExecPlan, batch: int = 1, dtype=np.float32, exchange_steps=None
+) -> DistPlanSpec:
     return DistPlanSpec(
         n=plan.n,
         k=plan.k,
@@ -56,6 +66,11 @@ def dist_plan_spec(plan: ExecPlan, batch: int = 1, dtype=np.float32) -> DistPlan
         step_bounds=tuple(int(t) for t in plan.step_bounds),
         batch=batch,
         dtype=np.dtype(dtype),
+        exchange_steps=(
+            None
+            if exchange_steps is None
+            else tuple(int(t) for t in exchange_steps)
+        ),
     )
 
 
@@ -104,8 +119,15 @@ def _local_solve(spec: DistPlanSpec, rows_full, col_idx, vals, diag,
     # flags are STATIC plan data — every device already holds the full
     # [T, k] arrays (replicated in_specs) — so the barrier exchanges ONLY
     # the solved values: one all-gather per superstep instead of three.
-    for s in range(len(spec.step_bounds) - 1):
-        lo, hi = spec.step_bounds[s], spec.step_bounds[s + 1]
+    # With exchange_steps set, runs of supersteps certified by the
+    # elastic fusion bound share a single barrier.
+    bounds = (
+        spec.exchange_steps
+        if spec.exchange_steps is not None
+        else spec.step_bounds
+    )
+    for s in range(len(bounds) - 1):
+        lo, hi = bounds[s], bounds[s + 1]
         if hi == lo:
             continue
         x, xv_steps = superstep(x, lo, hi)

@@ -64,16 +64,26 @@ def plan_arrays(plan: ExecPlan, dtype=jnp.float32) -> PlanArrays:
 def _step_single(x, acc, rows, cols, v, d, a, b_pad):
     """One plan step: gather, fused multiply-accumulate, divide, scatter.
 
-    Shared verbatim by the bulk-synchronous scan and the elastic
-    macro-step executor so both paths emit the exact same op sequence
-    per step — the foundation of the bitwise elastic == bulk guarantee
-    (tests/test_elastic.py).
+    Shared verbatim by the bulk-synchronous scan, the elastic macro-step
+    executor AND the row-sharded distributed executor
+    (``solver.rowsharded``) so every path emits the exact same op
+    sequence per step — the foundation of the bitwise elastic == bulk
+    and sharded == single-chip guarantees (tests/test_elastic.py,
+    tests/test_rowshard_distributed.py).
+
+    The W-reduction is an explicit fixed-order loop of ELEMENTWISE
+    multiply/adds rather than an einsum dot: elementwise IEEE ops are
+    exact per element, so a lane's bits are independent of the step's
+    tensor SHAPES. An einsum's reduction order is XLA's choice and was
+    observed to differ between k and k_local < k operands (1-ulp FMA
+    drift), which would break bitwise parity between a shard's local
+    scan and the full-width scan.
     """
     # named_scope tags the emitted HLO (zero runtime cost), so a
     # jax.profiler device trace carries plan-step names
     with jax.named_scope("sptrsv_step"):
-        partial_sum = jnp.einsum("kw,kw->k", v, x[cols])
-        acc = acc + partial_sum
+        for w in range(v.shape[1]):
+            acc = acc + v[:, w] * x[cols[:, w]]
         xv = (b_pad[rows] - acc) / d
         # finishing lanes write x and reset their accumulator
         write = jnp.where(a, x[rows], xv)
@@ -269,9 +279,13 @@ def solve_resident(bank: BankTensors, lane_idx, B_res) -> jax.Array:
 
 def _step_mrhs(x, acc, rows, cols, v, d, a, b_pad):
     """Multi-RHS twin of ``_step_single`` (value lanes widen to m);
-    shared by the bulk scan and the elastic macro-step body."""
+    shared by the bulk scan, the elastic macro-step body and the
+    row-sharded executor. Same fixed-order elementwise W-reduction as
+    ``_step_single`` — a column's bits are independent of both the lane
+    count k and the batch width m."""
     with jax.named_scope("sptrsv_step_mrhs"):
-        acc = acc + jnp.einsum("kw,kwm->km", v, x[cols])
+        for w in range(v.shape[1]):
+            acc = acc + v[:, w, None] * x[cols[:, w]]
         xv = (b_pad[rows] - acc) / d[:, None]
         write = jnp.where(a[:, None], x[rows], xv)
         x = x.at[rows].set(write)

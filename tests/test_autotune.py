@@ -303,6 +303,33 @@ def test_tune_mode_times_candidates():
 
 
 @pytest.mark.slow
+def test_tune_mode_sweeps_slack():
+    """On an elastic-capable backend tune=True additionally clocks the
+    winning strategy across the slack grid: ``timings`` stays one row
+    per shortlisted strategy, the swept windows land in
+    ``slack_timings``, and the tuned options carry the measured-best
+    slack."""
+    from repro.autotune.selector import SLACK_GRID
+
+    clear_selection_memo()
+    m = corpus_entries()[6].matrix()  # chain: serial regime, elastic on
+    solver = TriangularSolver.plan(
+        m, strategy="auto", tune=True, cache=PlanCache()
+    )
+    sel = solver.selection
+    assert sel.tuned
+    assert {t[0] for t in sel.timings} == {c.strategy for c in sel.candidates}
+    assert sel.slack_timings is not None
+    assert {s for s, _ in sel.slack_timings} == {0, *SLACK_GRID}
+    assert sel.options.slack == min(sel.slack_timings, key=lambda t: t[1])[0]
+    assert sel.as_dict()["slack_timings"] == list(sel.slack_timings)
+    b = np.random.default_rng(2).standard_normal(m.n_rows)
+    x = np.asarray(solver.solve(b))
+    ref = solve_lower_scipy(m, b)
+    assert np.abs(x - ref).max() / np.abs(ref).max() < 1e-3
+
+
+@pytest.mark.slow
 def test_tune_mode_on_pallas_backend():
     """tune=True trials honor the requested backend binding beyond the
     scan executor: the shortlist is compiled and timed through the
@@ -346,14 +373,15 @@ def test_tune_mode_on_distributed_backend_subprocess():
     """tune=True measured trials through the distributed backend: the
     shortlist compiles and times on a real (forced-host) device mesh in
     a subprocess, the tuned winner is mesh-bound and correct, and — the
-    distributed backend having no "elastic" capability — the selector
-    never turns elastic slack on for its trials, even on a banded
-    pattern that WOULD go elastic on scan."""
+    distributed backend now executing the elastic fused-barrier
+    certificate — the selector sweeps the slack grid on the clock
+    winner and the tuned binding fuses its exchange rounds."""
     from _mesh import run_in_mesh_subprocess
 
     run_in_mesh_subprocess("""
         import numpy as np, jax
         from repro.autotune import clear_selection_memo
+        from repro.autotune.selector import SLACK_GRID
         from repro.pipeline import PlanCache, TriangularSolver
         from repro.solver import solve_lower_scipy
         from repro.sparse import narrow_band_lower
@@ -372,10 +400,19 @@ def test_tune_mode_on_distributed_backend_subprocess():
             c.strategy for c in sel.candidates}
         assert all(t[1] > 0 for t in sel.timings)
         assert solver.backend == "distributed"
-        # no elastic leak into a backend that cannot run it
-        assert sel.options.slack == 0
-        assert all(c.options.slack == 0 for c in sel.candidates)
-        assert solver.info()["mode"] == "bsp"
+        # distributed is elastic-capable: the slack grid was clocked and
+        # the tuned options carry the measured winner
+        assert sel.slack_timings is not None
+        assert {s for s, _ in sel.slack_timings} == {0, *SLACK_GRID}
+        assert sel.options.slack == min(
+            sel.slack_timings, key=lambda t: t[1])[0]
+        info = solver.info()
+        assert info["mode"] == (
+            "elastic" if sel.options.slack else "bsp")
+        ex = info["binding"]["exchange"]
+        if sel.options.slack:  # fused exchange rounds actually execute
+            assert ex["rounds"] <= ex["n_supersteps"]
+            assert ex["executed_fusion"] >= 1.0
         # the tuned winner is cached under its mesh binding: pure hit
         hits0 = cache.stats.hits
         again = TriangularSolver.plan(

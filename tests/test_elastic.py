@@ -113,6 +113,8 @@ def test_slack_validation():
         TriangularSolver.plan(chain_lower(50, seed=4), mode="nope")
     with pytest.raises(ValueError):
         TriangularSolver.plan(chain_lower(50, seed=4), mode="bsp", slack=4)
+    # distributed supports elastic now (fused exchange rounds) but still
+    # requires a mesh at bind time
     with pytest.raises(ValueError):
         TriangularSolver.plan(
             chain_lower(50, seed=4), backend="distributed", mode="elastic"
@@ -279,7 +281,10 @@ def test_backend_capabilities_advertise_elastic():
 
     assert "elastic" in get_backend("scan").capabilities()
     assert "elastic" in get_backend("pallas").capabilities()
-    assert "elastic" not in get_backend("distributed").capabilities()
+    # distributed executes elastic as fused exchange rounds (the fused-
+    # barrier certificate, run for real) and also row-sharding
+    assert "elastic" in get_backend("distributed").capabilities()
+    assert "shard-rows" in get_backend("distributed").capabilities()
 
 
 # --------------------------------------------------- slow: full corpus grid
