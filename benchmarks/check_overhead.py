@@ -1,0 +1,181 @@
+"""Verifier-overhead benchmark — ``repro.analysis`` vs the inspector.
+
+A verifier that doubles inspection time never gets turned on.  This
+driver times the static passes against ``compile_plan`` (the dominant
+inspector stage the verifier re-audits) on the inspector_bench families
+at N in {1e4, 1e5}:
+
+  * **fast** — the default ``validate="fast"`` invariant set (schedule
+    race detect + reorder audit + plan sanitizer + lane layout), the
+    thing meant to ride along on every build;
+  * **full** — adds value provenance and load accounting; bounded but
+    not gated (it is the slow/CI depth).
+
+Acceptance (ISSUE 10): fast <= 15% of ``compile_plan`` time at N=1e5.
+
+Output: human table + ``repro-bench-rows/v1`` JSON (``--json``), the
+same schema as the other benchmark drivers.
+
+  PYTHONPATH=src:. python -m benchmarks.check_overhead --json chk.json
+  PYTHONPATH=src:. python -m benchmarks.check_overhead --smoke  # CI:
+      N=1e4 rows only + the acceptance ratio check at that size
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import write_json_rows
+from repro.analysis import Artifacts, verify_artifacts
+from repro.autotune import scale_corpus_entry
+from repro.core.plan import compile_plan
+from repro.core.reorder import apply_reordering
+from repro.pipeline import schedule
+from repro.sparse import (
+    dag_from_lower_csr,
+    erdos_renyi_lower,
+    narrow_band_lower,
+)
+
+K = 8
+ACCEPT_RATIO = 0.15  # fast verify / compile_plan, at N=1e5 (the gate)
+SMOKE_RATIO = 0.30  # N=1e4 CI sanity bound: fixed per-call overhead
+#                     dominates at small N, so the 1e5 budget is not
+#                     representative there
+
+FAMILIES = {
+    "er_sparse": {
+        10_000: lambda: erdos_renyi_lower(10_000, 0.002 * 800 / 10_000,
+                                          seed=201),
+        100_000: scale_corpus_entry("er_sparse_100k").make,
+    },
+    "band_narrow": {
+        10_000: lambda: narrow_band_lower(10_000, 0.14, 10, seed=203),
+        100_000: scale_corpus_entry("band_narrow_100k").make,
+    },
+}
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _bench_point(name: str, L0, *, reps: int) -> dict:
+    dag = dag_from_lower_csr(L0)
+    s0 = schedule(dag, K, strategy="growlocal")
+    L, s, _, r = apply_reordering(L0, s0)
+    plan = compile_plan(L, s)
+    art = Artifacts(L=L, sched=s, plan=plan, perm=r.perm, sched_pre=s0)
+
+    rep = verify_artifacts(art, level="full")  # warm + correctness gate
+    if not rep.ok:
+        raise SystemExit(
+            f"check_overhead FAILED: verifier flagged a pristine plan "
+            f"({name}): {rep.codes()}"
+        )
+
+    t_compile = _median_time(lambda: compile_plan(L, s), reps)
+    t_fast = _median_time(
+        lambda: verify_artifacts(art, level="fast"), reps
+    )
+    t_full = _median_time(
+        lambda: verify_artifacts(art, level="full"), max(reps - 1, 1)
+    )
+    return {
+        "name": name,
+        "n": L.n_rows,
+        "nnz": L.nnz,
+        "compile_seconds": t_compile,
+        "verify_fast_seconds": t_fast,
+        "verify_full_seconds": t_full,
+        "fast_ratio": t_fast / t_compile,
+        "full_ratio": t_full / t_compile,
+    }
+
+
+def run(csv_rows, *, smoke: bool = False) -> dict:
+    sizes = (10_000,) if smoke else (10_000, 100_000)
+    print(
+        f"# check_overhead — static verifier vs compile_plan, k={K}, "
+        f"growlocal ({'smoke: N=1e4 only' if smoke else 'full'})"
+    )
+    print(
+        f"{'matrix':22s} {'nnz':>9s} {'compile ms':>11s} {'fast ms':>9s} "
+        f"{'full ms':>9s} {'fast/comp':>10s} {'full/comp':>10s}"
+    )
+    out = {}
+    gate_ratios = []
+    for fam, points in FAMILIES.items():
+        for n in sizes:
+            L = points[n]()
+            tag = f"{fam}.{n // 1000}k"
+            r = _bench_point(tag, L, reps=5)
+            out[tag] = r
+            if n == max(sizes):
+                gate_ratios.append(r["fast_ratio"])
+            print(
+                f"{tag:22s} {r['nnz']:9d} "
+                f"{r['compile_seconds']*1e3:11.1f} "
+                f"{r['verify_fast_seconds']*1e3:9.1f} "
+                f"{r['verify_full_seconds']*1e3:9.1f} "
+                f"{r['fast_ratio']:9.1%} {r['full_ratio']:9.1%}"
+            )
+            csv_rows.append(
+                (f"analysis.{tag}.verify_fast",
+                 round(r["verify_fast_seconds"] * 1e6, 1),
+                 round(r["fast_ratio"], 4))
+            )
+            csv_rows.append(
+                (f"analysis.{tag}.verify_full",
+                 round(r["verify_full_seconds"] * 1e6, 1),
+                 round(r["full_ratio"], 4))
+            )
+            csv_rows.append(
+                (f"analysis.{tag}.compile",
+                 round(r["compile_seconds"] * 1e6, 1), 1.0)
+            )
+    worst = max(gate_ratios)
+    budget = SMOKE_RATIO if smoke else ACCEPT_RATIO
+    ok = worst <= budget
+    size_tag = f"{max(sizes) // 1000}k"
+    print(
+        f"acceptance at N={size_tag} (fast <= {budget:.0%} of "
+        f"compile_plan): {'PASS' if ok else 'MISS'} (worst {worst:.1%})"
+    )
+    out["accept_fast_ratio"] = bool(ok)
+    if not ok:
+        raise SystemExit(
+            f"check_overhead FAILED: fast verify is {worst:.1%} of "
+            f"compile_plan at N={size_tag} (budget {budget:.0%})"
+        )
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short CI run: N=1e4 rows only; still gates on the fast "
+        "ratio (exits non-zero on overrun)",
+    )
+    args = ap.parse_args(argv)
+    csv_rows = []
+    out = run(csv_rows, smoke=args.smoke)
+    print("\n# CSV: name,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    if args.json:
+        write_json_rows(args.json, csv_rows, ["analysis"], analysis=out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

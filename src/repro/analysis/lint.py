@@ -1,0 +1,333 @@
+"""Determinism lint — AST rules over executor/kernel source.
+
+The PR 9 bug class, machine-checked: bitwise determinism of the solve
+depends on every lane reduction being a *fixed-order* left-to-right
+fold (``for w: acc = acc + v[:, w] * x[cols[:, w]]``).  Library
+reductions (``einsum`` / ``jnp.sum`` / ``dot`` / ...) let XLA
+reassociate the adds, so the same row can produce 1-ulp-different
+results at different lane widths (k=8 vs a k_local=1 shard) — exactly
+the drift that broke the sharded conformance grid before PR 9 fixed it
+by hand.  Jitted functions that close over *mutable module state* are
+the other half of the class: the first trace bakes the state in, later
+host mutations silently diverge from device behavior.
+
+Rules (scoped to ``src/repro/solver/`` and ``src/repro/kernels/``):
+
+  * ``LINT_NONDET_REDUCTION`` — a call to a known reassociating
+    reduction (``einsum``, ``sum``, ``dot``, ``matmul``, ``vdot``,
+    ``inner``, ``tensordot``, ``prod``, ``psum``) on a numeric module
+    (``jnp``/``np``/``lax``/``jax.numpy``/``jax.lax``) or as an array
+    method.
+  * ``LINT_JIT_MUTABLE_CAPTURE`` — a jitted function whose free names
+    resolve to module-level mutable bindings (container literals,
+    rebound module names, ``global``-mutated names).
+
+Blessing: a reduction that is *proven* safe (validated against a
+fixed-order oracle, or deliberately outside the bitwise contract like
+the sparse-psum exchange) carries a pragma comment on its line or the
+line above::
+
+    acc = jnp.sum(v * g, axis=-1)  # repro: blessed-reduction — <why>
+
+``# repro: blessed-capture`` plays the same role for rule 2.  The lint
+never blesses implicitly — every escape is a visible, grep-able pragma.
+
+Run standalone: ``python -m repro.analysis.lint [paths...]``.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import os
+import sys
+from typing import Iterable, List, Sequence
+
+from repro.analysis.findings import Finding, finding
+
+CHECK = "lint"
+
+REDUCTION_NAMES = frozenset({
+    "einsum", "sum", "dot", "matmul", "vdot", "inner", "tensordot",
+    "prod", "psum",
+})
+NUMERIC_MODULES = frozenset({"jnp", "np", "numpy", "lax"})
+MUTABLE_CALLS = frozenset({
+    "dict", "list", "set", "bytearray", "defaultdict", "deque",
+    "OrderedDict", "Counter",
+})
+PRAGMA_REDUCTION = "repro: blessed-reduction"
+PRAGMA_CAPTURE = "repro: blessed-capture"
+_BUILTINS = frozenset(dir(builtins))
+
+
+def default_lint_roots() -> List[str]:
+    """The executor surface the determinism contract covers."""
+    # two levels up from this file: src/repro (repro itself is a
+    # namespace package, so repro.__file__ is None)
+    pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return [os.path.join(pkg, "solver"), os.path.join(pkg, "kernels")]
+
+
+def _blessed(lines: Sequence[str], node: ast.AST, pragma: str) -> bool:
+    """Pragma on any line the node spans, or anywhere in the contiguous
+    comment block directly above it (multi-line justifications).  For
+    decorated defs the block sits above the *first decorator*, which is
+    where a human writes it."""
+    lo = min(
+        [node.lineno]
+        + [d.lineno for d in getattr(node, "decorator_list", [])]
+    )
+    hi = getattr(node, "end_lineno", node.lineno)
+    if any(pragma in ln for ln in lines[lo - 1:hi]):
+        return True
+    i = lo - 2  # 0-based index of the line above
+    while i >= 0 and lines[i].lstrip().startswith("#"):
+        if pragma in lines[i]:
+            return True
+        i -= 1
+    return False
+
+
+def _is_numeric_base(node: ast.expr) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in NUMERIC_MODULES
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        # jax.numpy / jax.lax / scipy-style dotted modules
+        return node.value.id == "jax" and node.attr in ("numpy", "lax")
+    return False
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    """``jax.jit`` / ``jit`` / ``partial(jax.jit, ...)`` /
+    ``functools.partial(jax.jit, ...)``."""
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        is_partial = (
+            (isinstance(f, ast.Name) and f.id == "partial")
+            or (isinstance(f, ast.Attribute) and f.attr == "partial")
+        )
+        if is_partial:
+            return any(_is_jit_expr(a) for a in node.args)
+    return False
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """Module-level binding census: which names are mutable state."""
+
+    def __init__(self) -> None:
+        self.assign_count: dict = {}
+        self.mutable: set = set()
+        self.global_mutated: set = set()
+
+    def _record(self, name: str, value: ast.expr | None) -> None:
+        self.assign_count[name] = self.assign_count.get(name, 0) + 1
+        if value is not None and self._is_mutable_value(value):
+            self.mutable.add(name)
+
+    @staticmethod
+    def _is_mutable_value(v: ast.expr) -> bool:
+        if isinstance(v, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(v, ast.Call):
+            f = v.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None
+            )
+            return name in MUTABLE_CALLS
+        return False
+
+    def scan(self, tree: ast.Module) -> None:
+        for node in tree.body:  # module level only
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self._record(t.id, node.value)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                self._record(node.target.id, node.value)
+            elif isinstance(node, ast.AugAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                self._record(node.target.id, None)
+        # names mutated through `global` anywhere in the module
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Global):
+                self.global_mutated.update(node.names)
+
+    def mutable_names(self) -> set:
+        rebound = {n for n, c in self.assign_count.items() if c > 1}
+        return self.mutable | rebound | self.global_mutated
+
+
+def _free_names(fn: ast.AST) -> set:
+    """Names a function loads but never binds (args, stores, nested
+    defs).  Approximate lexical scoping: one binding set for the whole
+    subtree — good enough to resolve module-level captures."""
+    bound: set = set()
+    loads: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                loads.add(node.id)
+            else:
+                bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(node.name)
+            a = node.args
+            for arg in (
+                list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+                + ([a.vararg] if a.vararg else [])
+                + ([a.kwarg] if a.kwarg else [])
+            ):
+                bound.add(arg.arg)
+        elif isinstance(node, ast.Lambda):
+            a = node.args
+            for arg in (
+                list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+                + ([a.vararg] if a.vararg else [])
+                + ([a.kwarg] if a.kwarg else [])
+            ):
+                bound.add(arg.arg)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+    return loads - bound - _BUILTINS
+
+
+def lint_source(src: str, filename: str = "<string>") -> List[Finding]:
+    """Lint one source string; returns findings (empty = clean)."""
+    out: List[Finding] = []
+    try:
+        tree = ast.parse(src, filename=filename)
+    except SyntaxError as e:
+        out.append(finding(
+            CHECK, "LINT_SYNTAX", f"cannot parse: {e}",
+            file=filename, line=e.lineno or 0,
+        ))
+        return out
+    lines = src.splitlines()
+
+    # rule 1: reassociating reductions
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        attr = node.func.attr
+        if attr not in REDUCTION_NAMES:
+            continue
+        base = node.func.value
+        is_module = _is_numeric_base(base)
+        # array-method form (`x.sum(...)`) — same reassociation hazard;
+        # restricted to the unambiguous reduction names to avoid
+        # flagging unrelated objects' methods
+        is_method = not is_module and attr in (
+            "sum", "dot", "matmul", "prod",
+        )
+        if not (is_module or is_method):
+            continue
+        if _blessed(lines, node, PRAGMA_REDUCTION):
+            continue
+        out.append(finding(
+            CHECK, "LINT_NONDET_REDUCTION",
+            f"{filename}:{node.lineno}: `{attr}` reduction may "
+            "reassociate across lanes — use a fixed-order fold or "
+            f"bless with `# {PRAGMA_REDUCTION}`",
+            file=filename, line=node.lineno,
+        ))
+
+    # rule 2: jitted functions over mutable module state
+    scan = _ModuleScan()
+    scan.scan(tree)
+    mutable = scan.mutable_names()
+    if mutable:
+        jitted: List[ast.AST] = []
+        fn_defs = {
+            n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    jitted.append(node)
+            elif (
+                isinstance(node, ast.Call) and _is_jit_expr(node.func)
+                and node.args and isinstance(node.args[0], ast.Name)
+                and node.args[0].id in fn_defs
+            ):
+                jitted.append(fn_defs[node.args[0].id])
+        seen: set = set()
+        for fn in jitted:
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            captured = sorted(_free_names(fn) & mutable)
+            if not captured:
+                continue
+            if _blessed(lines, fn, PRAGMA_CAPTURE):
+                continue
+            out.append(finding(
+                CHECK, "LINT_JIT_MUTABLE_CAPTURE",
+                f"{filename}:{fn.lineno}: jitted "
+                f"`{getattr(fn, 'name', '<fn>')}` closes over mutable "
+                f"module state {', '.join(captured)} — the first trace "
+                "bakes it in; pass it as an argument or bless with "
+                f"`# {PRAGMA_CAPTURE}`",
+                file=filename, line=fn.lineno,
+            ))
+    return out
+
+
+def lint_paths(paths: Iterable[str] | None = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories);
+    defaults to the solver + kernels trees."""
+    roots = list(paths) if paths else default_lint_roots()
+    files: List[str] = []
+    for root in roots:
+        if os.path.isfile(root):
+            files.append(root)
+            continue
+        for dirpath, _, names in sorted(os.walk(root)):
+            files.extend(
+                os.path.join(dirpath, f)
+                for f in sorted(names) if f.endswith(".py")
+            )
+    out: List[Finding] = []
+    for f in files:
+        with open(f, "r", encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), filename=f))
+    return out
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="determinism lint over executor/kernel source",
+    )
+    p.add_argument(
+        "paths", nargs="*",
+        help="files/directories to lint (default: solver + kernels)",
+    )
+    args = p.parse_args(argv)
+    found = lint_paths(args.paths or None)
+    for f in found:
+        print(f"{f.code}  {f.message}")
+    n_files = len(args.paths) if args.paths else 2
+    print(
+        f"determinism lint: {len(found)} finding(s) over "
+        f"{n_files} root(s)"
+    )
+    return 1 if found else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,4 +42,6 @@ def sptrsv_ref(row_ids, col_idx, vals, diag, accum, b_pad):
 def spmv_block_ref(x_block, idx, vals):
     """Oracle for the gather-SpMV kernel: y[r] = sum_w vals[r,w]*x[idx[r,w]].
     x_block f[m]; idx int32[R,W]; vals f[R,W] -> y f[R]."""
+    # repro: blessed-reduction — SpMV oracle, outside the solve's
+    # bitwise contract (the solve oracle above folds in fixed order)
     return jnp.einsum("rw,rw->r", vals, x_block[idx])

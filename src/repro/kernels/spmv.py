@@ -34,6 +34,8 @@ def _spmv_kernel(col_ref, val_ref, x_ref, y_ref):
     vals = val_ref[...]
     x = x_ref[...]
     gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+    # repro: blessed-reduction — per-row W-axis dot; SpMV feeds CG's
+    # iterative loop, which is outside the solve's bitwise contract
     y_ref[...] = jnp.sum(vals * gathered, axis=-1)
 
 

@@ -78,6 +78,10 @@ def _sptrsv_kernel(
         a = accum_ref[t]
         x = x_ref[...]
         gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        # repro: blessed-reduction — W-axis dot within one lane: the
+        # operand set is fixed per (row, lane) regardless of k/shard, so
+        # reassociation cannot cross lanes (bitwise-checked vs the scan
+        # oracle in tests/test_kernels.py)
         acc = acc_ref[...] + jnp.sum(v * gathered, axis=-1)
         b_rows = jnp.take(b_ref[...], rows, axis=0)
         xv = (b_rows - acc) / d
@@ -122,6 +126,10 @@ def _sptrsv_mrhs_kernel(
         a = accum_ref[t]
         x = x_ref[...]  # f[n+1, m]
         gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(*cols.shape, -1)
+        # repro: blessed-reduction — W-axis dot within one lane: the
+        # operand set is fixed per (row, lane) regardless of k/shard, so
+        # reassociation cannot cross lanes (bitwise-checked vs the scan
+        # oracle in tests/test_kernels.py)
         acc = acc_ref[...] + jnp.sum(v[..., None] * gathered, axis=1)
         b_rows = jnp.take(b_ref[...], rows, axis=0)  # f[k, m]
         xv = (b_rows - acc) / d[:, None]
@@ -190,6 +198,10 @@ def _sptrsv_elastic_kernel(
         sel = waves == r  # bool[S]
         cols = col_ref[...]
         gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        # repro: blessed-reduction — W-axis dot within one lane: the
+        # operand set is fixed per (row, lane) regardless of k/shard, so
+        # reassociation cannot cross lanes (bitwise-checked vs the scan
+        # oracle in tests/test_kernels.py)
         ps = jnp.sum(val_ref[...] * gathered, axis=-1)  # f[S, k]
         tot_prev = tot_ref[...]
         # accumulator entering step s: the tile carry for s = 0, else
@@ -251,6 +263,10 @@ def _sptrsv_elastic_mrhs_kernel(
         sel = waves == r
         cols = col_ref[...]
         gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(*cols.shape, -1)
+        # repro: blessed-reduction — W-axis dot within one lane: the
+        # operand set is fixed per (row, lane) regardless of k/shard, so
+        # reassociation cannot cross lanes (bitwise-checked vs the scan
+        # oracle in tests/test_kernels.py)
         ps = jnp.sum(val_ref[...][..., None] * gathered, axis=2)  # f[S, k, m]
         tot_prev = tot_ref[...]
         sel_acc = jnp.concatenate(

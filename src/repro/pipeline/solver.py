@@ -393,6 +393,7 @@ class TriangularSolver:
         mode: Optional[str] = None,
         shard: str = "model",
         timed: bool = False,
+        validate: Optional[str] = None,
         **opts,
     ) -> "TriangularSolver":
         """Plan a solver for triangular ``a`` (lower, or upper with
@@ -429,6 +430,17 @@ class TriangularSolver:
         *concrete* key — so repeated auto plans on one pattern skip both
         selection and scheduling.
 
+        ``validate`` runs the independent static verifier
+        (``repro.analysis``) over the freshly built artifacts —
+        schedule, reorder permutation, plan tensors, elastic
+        certificate, and (``shard="rows"``) the halo partition:
+        ``"fast"`` is the vectorized invariant set, ``"full"`` adds
+        value provenance and per-shard audits, ``"off"`` (default)
+        skips. ``None`` defers to the ``REPRO_VALIDATE`` env var. A
+        finding raises ``analysis.VerificationError`` with the findings
+        table. Build-time only: cache hits return the already-verified
+        entry without re-checking.
+
         ``timed=True`` turns on per-step timed execution (``repro.obs``):
         every ``solve`` routes through ``solve_timed`` and records
         per-superstep / per-macro-step device timings. Deliberately NOT
@@ -439,6 +451,11 @@ class TriangularSolver:
         # string enters the plan-cache key ("GrowLocal" vs "growlocal"
         # must not schedule twice); also makes strategy="Auto" work
         strategy = strategy.lower()
+        # resolve (and reject) the validation level before any scheduling
+        # work; "off" keeps the verifier entirely off the build path
+        from repro.analysis import resolve_level
+
+        check_level = resolve_level(validate)
         # fail fast on an unknown backend — before any scheduling work and
         # with the registry (not a hard-coded tuple) naming the options
         from repro.backends import get_backend
@@ -545,6 +562,21 @@ class TriangularSolver:
 
                 plan.elastic = elastic_transform(plan, o.slack)
 
+            if check_level != "off":
+                # verify against m2 BEFORE the val_src rebase below —
+                # the provenance audit matches sources against the
+                # matrix the plan was actually compiled from
+                from repro import analysis
+
+                analysis.verify_artifacts(
+                    analysis.Artifacts(
+                        L=m2, sched=s2, plan=plan,
+                        perm=inner if o.reorder else None,
+                        sched_pre=s if o.reorder else None,
+                    ),
+                    level=check_level,
+                ).raise_if_failed()
+
             # rebase the plan's value-source maps onto a's entry order so
             # numeric_update() consumes a.data directly
             entry_map = _entry_permutation(m0, inner)  # m2 entry -> m0 entry
@@ -575,6 +607,17 @@ class TriangularSolver:
             # selection is recorded at build time only — cached solvers are
             # never mutated after being handed out (see the property doc)
             solver._selection = selection
+            if check_level != "off" and shard == "rows":
+                # the halo partition is produced at backend bind time;
+                # audit it against the plan it was cut from (the value
+                # check deliberately skips the rebased source maps)
+                from repro import analysis
+
+                rsp = getattr(solver.bound, "_rsp", None)
+                if rsp is not None:
+                    analysis.verify_rowshard_report(
+                        plan, rsp, level=check_level
+                    ).raise_if_failed()
             return solver
 
         # the tuned winner was compiled+warmed during the measured trials

@@ -58,12 +58,15 @@ def cg_solve(
     def body(state):
         x, r, z, p, it = state
         ap = matvec(p)
+        # repro: blessed-reduction — CG inner products: the iteration is
+        # convergence-bounded, not bitwise-specified (only the triangular
+        # solves inside the preconditioner carry the bitwise contract)
         rz = jnp.vdot(r, z)
-        alpha = rz / (jnp.vdot(p, ap) + 1e-30)
+        alpha = rz / (jnp.vdot(p, ap) + 1e-30)  # repro: blessed-reduction
         x = x + alpha * p
         r2 = r - alpha * ap
         z2 = M(r2)
-        beta = jnp.vdot(r2, z2) / (rz + 1e-30)
+        beta = jnp.vdot(r2, z2) / (rz + 1e-30)  # repro: blessed-reduction
         p = z2 + beta * p
         return (x, r2, z2, p, it + 1)
 

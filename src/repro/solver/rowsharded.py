@@ -177,6 +177,9 @@ def _exchange_psum(x, tables, buf_size):
     tail = x.shape[1:]
     buf = jnp.zeros((buf_size + 1, *tail), x.dtype)
     buf = buf.at[sp[0]].add(x[ss[0]])
+    # repro: blessed-reduction — value + zeros per position (exactly one
+    # owner writes each); numerically exact, -0.0 hazard documented
+    # above, and the executor defaults to the bitwise-safe ring form
     buf = jax.lax.psum(buf, "model")
     return x.at[rt[0]].set(buf[rp[0]])
 

@@ -1,0 +1,274 @@
+"""``repro.analysis`` — the independent static verifier.
+
+Three claims, each tested directly:
+
+  * **soundness on pristine artifacts** — the verifier reports nothing
+    on anything the real pipeline produces, including the degenerate
+    shapes (single row, serial k=1, single shard) and, property-based,
+    on randomly generated matrices across strategies;
+  * **sensitivity** — every operator in the mutation harness
+    (``analysis.mutate``) is caught at ``level="full"`` on an artifact
+    set where it applies (the harness's own acceptance bar);
+  * **determinism** — two runs over the same artifacts produce the
+    identical findings representation (the verifier is itself part of
+    the reproducibility story).
+
+Plus the wiring: ``TriangularSolver.plan(validate=...)`` /
+``REPRO_VALIDATE`` gate builds with ``VerificationError``, and the
+fast/full level split behaves as documented (fast is a subset that
+still catches structural corruption).
+
+Property tests ride the optional-``hypothesis`` shim (``tests/_hyp.py``)
+so collection survives without the package installed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, strategies as st
+
+from repro.analysis import (
+    Artifacts,
+    VerificationError,
+    resolve_level,
+    verify_artifacts,
+)
+from repro.analysis.mutate import MUTATIONS, build_artifacts, run_harness
+from repro.autotune import corpus_entry
+from repro.pipeline import TriangularSolver
+from repro.sparse import csr_from_dense, erdos_renyi_lower, narrow_band_lower
+
+# one representative artifact set per family-coverage niche (mirrors
+# launch.check's harness grid): elastic+4shard, narrow width (accum
+# chains), multi-round wavefront exchanges, 2-shard chain
+_GRID = [
+    ("er_dense", "growlocal", dict(slack=4, n_shards=4)),
+    ("band_narrow", "growlocal", dict(slack=4, n_shards=4, width=2)),
+    ("er_dense", "wavefront", dict(slack=0, n_shards=4)),
+    ("chain", "growlocal", dict(slack=2, n_shards=2)),
+]
+
+
+@pytest.fixture(scope="module")
+def artifact_sets():
+    return [
+        (f"{name}/{strategy}", build_artifacts(
+            corpus_entry(name).matrix(), strategy=strategy, k=8, **kw
+        ))
+        for name, strategy, kw in _GRID
+    ]
+
+
+# ------------------------------------------------------------- soundness
+
+@pytest.mark.parametrize("level", ["fast", "full"])
+def test_pristine_artifacts_verify_clean(artifact_sets, level):
+    for label, art in artifact_sets:
+        rep = verify_artifacts(art, level=level)
+        assert rep.ok, (label, level, rep.table())
+        # coverage, not just silence: every applicable pass really ran
+        expect = {"schedule", "reorder", "plan", "elastic", "rowshard"}
+        if art.elastic is None:
+            expect.discard("elastic")
+        assert expect <= set(rep.checks_run), (label, rep.checks_run)
+
+
+def test_degenerate_single_row():
+    a = csr_from_dense(np.array([[2.0]]))
+    art = build_artifacts(a, strategy="serial", k=8)
+    for level in ("fast", "full"):
+        rep = verify_artifacts(art, level=level)
+        assert rep.ok, rep.table()
+
+
+def test_degenerate_serial_k1():
+    a = narrow_band_lower(60, 0.2, 3, seed=5)
+    art = build_artifacts(a, strategy="serial", k=1)
+    rep = verify_artifacts(art, level="full")
+    assert rep.ok, rep.table()
+
+
+def test_degenerate_single_shard():
+    a = erdos_renyi_lower(80, 0.05, seed=7)
+    art = build_artifacts(a, strategy="growlocal", k=8, n_shards=1)
+    assert art.rowshard is None  # 1 shard -> no partition to audit
+    rep = verify_artifacts(art, level="full")
+    assert rep.ok, rep.table()
+
+
+def test_level_off_is_inert():
+    rep = verify_artifacts(
+        Artifacts(L=None, sched=None, plan=None), level="off"
+    )
+    assert rep.ok and not rep.checks_run
+
+
+# ----------------------------------------------------------- sensitivity
+
+def test_every_mutation_caught(artifact_sets):
+    """The harness acceptance bar: each operator applies somewhere and
+    is caught everywhere it applies; pristine sets stay clean."""
+    rows = run_harness(artifact_sets)
+    by_op = {}
+    for r in rows:
+        d = by_op.setdefault(r["mutation"], [])
+        if r["caught"] is not None:
+            d.append((r["artifacts"], r["caught"], r["codes"]))
+    assert set(by_op) == {m.name for m in MUTATIONS}
+    assert len(MUTATIONS) >= 8
+    assert {m.family for m in MUTATIONS} == {
+        "schedule", "plan", "elastic", "rowshard",
+    }
+    for op, hits in by_op.items():
+        assert hits, f"{op}: no applicable artifact set in the grid"
+        missed = [(lbl, codes) for lbl, ok, codes in hits if not ok]
+        assert not missed, f"{op} escaped verification: {missed}"
+
+
+def test_fast_level_catches_structural_corruption(artifact_sets):
+    """fast is a screen, not a no-op: layout-visible corruption (a row
+    finalized in the wrong superstep) is flagged without the O(nnz)
+    passes."""
+    from repro.analysis.mutate import plan_swap_rows
+
+    _, art = artifact_sets[0]
+    bad = plan_swap_rows(art, np.random.default_rng(0))
+    assert bad is not None
+    rep = verify_artifacts(bad, level="fast")
+    assert not rep.ok and rep.codes()
+
+
+def test_verification_error_carries_report(artifact_sets):
+    from repro.analysis.mutate import plan_zero_diag
+
+    _, art = artifact_sets[0]
+    bad = plan_zero_diag(art, np.random.default_rng(0))
+    rep = verify_artifacts(bad, level="full")
+    with pytest.raises(VerificationError) as ei:
+        rep.raise_if_failed()
+    assert "PLAN_ZERO_DIAG" in str(ei.value)
+    assert ei.value.report is rep
+
+
+# ----------------------------------------------------------- determinism
+
+def test_verifier_is_deterministic(artifact_sets):
+    """Same artifacts -> byte-identical findings, clean or corrupt."""
+    for label, art in artifact_sets:
+        a = verify_artifacts(art, level="full").as_dict()
+        b = verify_artifacts(art, level="full").as_dict()
+        assert a == b, label
+    from repro.analysis.mutate import schedule_swap_steps
+
+    _, art = artifact_sets[2]
+    bad = schedule_swap_steps(art, np.random.default_rng(3))
+    assert bad is not None
+    r1 = verify_artifacts(bad, level="full")
+    r2 = verify_artifacts(bad, level="full")
+    assert [f.as_dict() for f in r1.findings] == \
+        [f.as_dict() for f in r2.findings]
+
+
+# ---------------------------------------------------------------- wiring
+
+def test_plan_validate_gates_and_env(monkeypatch):
+    a = erdos_renyi_lower(120, 0.04, seed=9)
+    s = TriangularSolver.plan(a, k=8, validate="full")
+    x = np.asarray(s.solve(np.ones(120)))
+    assert np.isfinite(x).all()
+    with pytest.raises(ValueError, match="validate"):
+        TriangularSolver.plan(a, k=8, validate="bogus")
+    # env fallback: REPRO_VALIDATE drives the default level
+    monkeypatch.setenv("REPRO_VALIDATE", "fast")
+    assert resolve_level(None) == "fast"
+    assert resolve_level("off") == "off"  # explicit arg wins
+    TriangularSolver.plan(a, k=8)  # builds (and verifies) clean
+    monkeypatch.setenv("REPRO_VALIDATE", "nope")
+    with pytest.raises(ValueError, match="validate"):
+        TriangularSolver.plan(a, k=8)
+
+
+def test_obs_counters_increment():
+    from repro import obs
+
+    a = narrow_band_lower(100, 0.15, 4, seed=3)
+    art = build_artifacts(a, strategy="growlocal", k=8)
+    buf = obs.TraceBuffer("analysis-test")
+    with obs.tracing(buf):
+        verify_artifacts(art, level="fast")
+    assert buf.counters().get("analysis.verifications") == 1
+    spans = [s for s in buf.spans() if s.name == "analysis.verify"]
+    assert len(spans) == 1
+    assert spans[0].args.get("ok") is True
+
+
+# ------------------------------------------------------- property tests
+
+_DENS = (0.02, 0.05, 0.1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=220),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dens=st.integers(min_value=0, max_value=len(_DENS) - 1),
+    strategy=st.sampled_from(("growlocal", "wavefront", "serial")),
+    slack=st.integers(min_value=0, max_value=4),
+)
+def test_property_pipeline_output_verifies(n, seed, dens, strategy, slack):
+    """Whatever the real pipeline builds, the verifier accepts."""
+    a = erdos_renyi_lower(n, _DENS[dens], seed=seed)
+    art = build_artifacts(
+        a, strategy=strategy, k=8, slack=slack,
+        n_shards=2 if n >= 8 else 1,
+    )
+    rep = verify_artifacts(art, level="full")
+    assert rep.ok, rep.table()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mi=st.integers(min_value=0, max_value=len(MUTATIONS) - 1),
+)
+def test_property_mutations_never_escape(artifact_sets, seed, mi):
+    """Any seeded corruption, on any artifact set where it applies, is
+    flagged — and the verdict is stable across a repeat run."""
+    m = MUTATIONS[mi]
+    rng_seed = seed
+    for label, art in artifact_sets:
+        bad = m.apply(art, np.random.default_rng(rng_seed))
+        if bad is None:
+            continue
+        r1 = verify_artifacts(bad, level="full")
+        assert not r1.ok, (m.name, label)
+        r2 = verify_artifacts(bad, level="full")
+        assert r1.codes() == r2.codes(), (m.name, label)
+
+
+def test_hypothesis_shim_consistency():
+    """The shim reports its mode honestly (bookkeeping for CI logs)."""
+    assert HAVE_HYPOTHESIS in (True, False)
+
+
+# -------------------------------------------------- slow: corpus depth
+
+@pytest.mark.slow
+def test_full_corpus_sweep_clean():
+    """launch.check's grid, as a pytest: every corpus matrix x all
+    strategies x orientations x modes x shard counts verifies clean at
+    level="full"."""
+    from repro.launch.check import sweep_cells
+    from repro.autotune import corpus_names
+    from repro.pipeline.registry import available_strategies
+
+    rows = sweep_cells(
+        matrices=corpus_names(),
+        strategies=tuple(
+            s for s in available_strategies() if s != "auto"
+        ),
+        level="full",
+    )
+    bad = [r for r in rows if not r["ok"]]
+    assert not bad, bad[:5]
+    assert len(rows) == 9 * 7 * 2 * 2 * 2

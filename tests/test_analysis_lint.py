@@ -1,0 +1,215 @@
+"""Determinism lint (``repro.analysis.lint``) — rule-level fixtures.
+
+Each rule gets positive (flagged) and negative (clean) snippets,
+including the pragma escapes. The regression anchor is the PR 9 bug
+class itself: the ``einsum``-revert of the executor's fixed-order lane
+fold must be flagged, and the *current* solver/kernels tree — where
+every library reduction carries a ``blessed-reduction`` justification —
+must lint clean.
+"""
+import textwrap
+
+from repro.analysis.lint import (
+    default_lint_roots,
+    lint_paths,
+    lint_source,
+)
+
+
+def _codes(src):
+    return sorted(f.code for f in lint_source(textwrap.dedent(src)))
+
+
+# ------------------------------------------- LINT_NONDET_REDUCTION
+
+def test_module_reduction_flagged():
+    src = """
+        import jax.numpy as jnp
+
+        def fold(v, x, cols):
+            return jnp.einsum("rw,rw->r", v, x[cols])
+    """
+    assert _codes(src) == ["LINT_NONDET_REDUCTION"]
+
+
+def test_einsum_revert_of_lane_fold_flagged():
+    """The exact regression the rule exists for: replacing the
+    executor's left-to-right lane fold with an einsum dot."""
+    src = """
+        import jax.numpy as jnp
+
+        def gather_dot(vals, idx, x_block):
+            # was: for w in range(W): acc = acc + vals[:, w] * x[idx[:, w]]
+            return jnp.einsum("rw,rw->r", vals, x_block[idx])
+    """
+    found = lint_source(textwrap.dedent(src), filename="revert.py")
+    assert [f.code for f in found] == ["LINT_NONDET_REDUCTION"]
+    assert "einsum" in found[0].message
+
+
+def test_fixed_order_fold_clean():
+    src = """
+        def fold(vals, idx, x, W):
+            acc = vals[:, 0] * x[idx[:, 0]]
+            for w in range(1, W):
+                acc = acc + vals[:, w] * x[idx[:, w]]
+            return acc
+    """
+    assert _codes(src) == []
+
+
+def test_method_and_lax_forms_flagged():
+    src = """
+        from jax import lax
+
+        def f(x, v):
+            a = x.sum(axis=-1)
+            b = lax.psum(v, "model")
+            return a, b
+    """
+    assert _codes(src) == ["LINT_NONDET_REDUCTION"] * 2
+
+
+def test_unrelated_method_names_clean():
+    # `sum`-like names on arbitrary objects outside the numeric set and
+    # the method whitelist must not fire
+    src = """
+        def f(counter, log):
+            counter.tensordot("no")  # not a numeric module base
+            return log.append(1)
+    """
+    assert _codes(src) == []
+
+
+def test_reduction_pragma_same_line_and_block_above():
+    src = """
+        import jax.numpy as jnp
+
+        def f(v, g):
+            a = jnp.sum(v * g, axis=-1)  # repro: blessed-reduction — oracle
+            # justification spanning
+            # repro: blessed-reduction — outside bitwise contract
+            b = jnp.einsum("rw,rw->r", v, g)
+            return a, b
+    """
+    assert _codes(src) == []
+
+
+def test_pragma_does_not_leak_to_later_lines():
+    src = """
+        import jax.numpy as jnp
+
+        def f(v, g):
+            a = jnp.sum(v, axis=-1)  # repro: blessed-reduction — ok
+
+            b = jnp.sum(g, axis=-1)
+            return a, b
+    """
+    assert _codes(src) == ["LINT_NONDET_REDUCTION"]
+
+
+# --------------------------------------- LINT_JIT_MUTABLE_CAPTURE
+
+def test_jit_mutable_capture_flagged():
+    src = """
+        import jax
+
+        _CACHE = {}
+
+        @jax.jit
+        def f(x):
+            return x * _CACHE.get("scale", 1)
+    """
+    assert _codes(src) == ["LINT_JIT_MUTABLE_CAPTURE"]
+
+
+def test_jit_call_form_and_rebound_name_flagged():
+    src = """
+        import jax
+
+        MODE = "a"
+        MODE = "b"  # rebound module binding = mutable state
+
+        def g(x):
+            return x if MODE == "a" else -x
+
+        g_fast = jax.jit(g)
+    """
+    assert _codes(src) == ["LINT_JIT_MUTABLE_CAPTURE"]
+
+
+def test_jit_over_constants_clean():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        SCALE = 2.0  # immutable, bound once
+
+        @jax.jit
+        def f(x):
+            return jnp.maximum(x, 0) * SCALE
+    """
+    assert _codes(src) == []
+
+
+def test_capture_pragma_blesses():
+    src = """
+        import jax
+
+        _TABLE = {}
+
+        # repro: blessed-capture — table frozen before first trace
+        @jax.jit
+        def f(x):
+            return x + _TABLE["bias"]
+    """
+    assert _codes(src) == []
+
+
+def test_global_mutation_flagged():
+    src = """
+        import jax
+
+        COUNT = 0
+
+        def bump():
+            global COUNT
+            COUNT += 1
+
+        @jax.jit
+        def f(x):
+            return x * COUNT
+    """
+    assert _codes(src) == ["LINT_JIT_MUTABLE_CAPTURE"]
+
+
+# ------------------------------------------------------ whole tree
+
+def test_syntax_error_reported_not_raised():
+    found = lint_source("def broken(:\n", filename="bad.py")
+    assert [f.code for f in found] == ["LINT_SYNTAX"]
+
+
+def test_current_tree_is_clean():
+    """The shipped solver + kernels trees lint clean — every library
+    reduction carries its blessing pragma."""
+    found = lint_paths()
+    assert found == [], "\n".join(f.message for f in found)
+    roots = default_lint_roots()
+    assert len(roots) == 2
+    assert roots[0].endswith("solver") and roots[1].endswith("kernels")
+
+
+def test_cli_exit_codes(tmp_path):
+    from repro.analysis.lint import main
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("X = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text(
+        "import jax.numpy as jnp\n"
+        "def f(v):\n"
+        "    return jnp.sum(v)\n"
+    )
+    assert main([str(clean)]) == 0
+    assert main([str(dirty)]) == 1

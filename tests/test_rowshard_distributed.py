@@ -40,7 +40,8 @@ def test_rowshard_bitwise_conformance_grid():
                         a, k=8, lower=lower, backend="scan", cache=cache)
                     s = TriangularSolver.plan(
                         a, k=8, lower=lower, backend="distributed",
-                        mesh=mesh, shard="rows", cache=cache)
+                        mesh=mesh, shard="rows", cache=cache,
+                        validate="fast")
                     d = s.bound.describe()
                     assert d["shard"] == "rows", d
                     assert d["n_shards"] == mesh_shape[1], d
@@ -75,9 +76,10 @@ def test_rowshard_elastic_fused_exchange_bitwise():
         ref = TriangularSolver.plan(a, k=8, backend="scan")
         s = TriangularSolver.plan(
             a, k=8, backend="distributed", mesh=mesh, shard="rows",
-            mode="elastic", slack=8)
+            mode="elastic", slack=8, validate="fast")
         bulk = TriangularSolver.plan(
-            a, k=8, backend="distributed", mesh=mesh, shard="rows")
+            a, k=8, backend="distributed", mesh=mesh, shard="rows",
+            validate="fast")
         d = s.bound.describe()
         db = bulk.bound.describe()
         ex, exb = d["exchange"], db["exchange"]
@@ -103,7 +105,8 @@ def test_rowshard_update_values_and_timed():
         a = erdos_renyi_lower(600, 3e-3, seed=11)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         s = TriangularSolver.plan(
-            a, k=8, backend="distributed", mesh=mesh, shard="rows")
+            a, k=8, backend="distributed", mesh=mesh, shard="rows",
+            validate="fast")
         b = np.random.default_rng(5).standard_normal(600).astype(np.float32)
         x0 = np.asarray(s.solve(b))
 
@@ -143,7 +146,8 @@ def test_rowshard_describe_comm_telemetry():
         a = narrow_band_lower(800, 0.1, 8, seed=6)
         mesh = jax.make_mesh((1, 8), ("data", "model"))
         s = TriangularSolver.plan(
-            a, k=8, backend="distributed", mesh=mesh, shard="rows")
+            a, k=8, backend="distributed", mesh=mesh, shard="rows",
+            validate="fast")
         d = s.bound.describe()
         assert d["backend"] == "distributed" and d["shard"] == "rows"
         ex = d["exchange"]
